@@ -1,0 +1,71 @@
+"""Roofline table renderer: reads dry-run artifacts (artifacts/dryrun-*.json)
+and prints the per-(arch x shape) three-term roofline (§Roofline).
+
+CLI:  PYTHONPATH=src python -m benchmarks.roofline [--artifacts DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def load_records(art_dir: pathlib.Path, mesh: str = "16x16",
+                 tag: str = "") -> List[Dict]:
+    recs = []
+    suffix = f"-{tag}.json" if tag else ".json"
+    for f in sorted(art_dir.glob(f"dryrun-*-{mesh}{suffix}")):
+        if not tag and len(f.stem.split("-")) and "-hc" in f.stem:
+            continue  # skip hillclimb-tagged artifacts in the baseline table
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_row(r: Dict) -> str:
+    tb = {"compute": r["t_compute"], "memory": r["t_memory"],
+          "collective": r["t_collective"]}
+    return (f"{r['arch']:<18} {r['shape']:<12} {r['kind']:<7} "
+            f"{r['t_compute']:>9.4f} {r['t_memory']:>9.4f} "
+            f"{r['t_collective']:>9.4f}  {r['bottleneck']:<10} "
+            f"{r['useful_flops_ratio']:>6.2f} "
+            f"{r['mfu_upper_bound']*100:>6.2f}% "
+            f"{r['peak_mem_per_device']/2**30:>7.2f}")
+
+
+HEADER = (f"{'arch':<18} {'shape':<12} {'kind':<7} "
+          f"{'t_comp(s)':>9} {'t_mem(s)':>9} {'t_coll(s)':>9}  "
+          f"{'bound':<10} {'useful':>6} {'MFU_ub':>7} {'GB/dev':>7}")
+
+
+def render(recs: List[Dict]) -> str:
+    out = [HEADER, "-" * len(HEADER)]
+    for r in recs:
+        if r.get("skipped"):
+            out.append(f"{r['arch']:<18} {r['shape']:<12} SKIP: "
+                       f"{r['skipped']}")
+        else:
+            out.append(fmt_row(r))
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=str(ARTIFACTS))
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    recs = load_records(pathlib.Path(args.artifacts), args.mesh, args.tag)
+    if not recs:
+        print(f"no dry-run artifacts for mesh {args.mesh} in "
+              f"{args.artifacts}; run `python -m repro.launch.dryrun --all`")
+        return
+    print(f"Roofline (mesh {args.mesh}, TPU v5e: 197 TF/s bf16, "
+          f"819 GB/s HBM, 50 GB/s ICI):")
+    print(render(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Benchmark orchestrator: one artifact per paper table/figure + roofline.
+
+Default (CI-friendly) scale runs reduced traces; ``--full`` reproduces the
+paper-scale sweeps (hours on one CPU core).
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 0.15] [--seeds 3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from . import figures, paper_tables, roofline, sweep
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.15,
+                    help="trace scale (1.0 = paper-size workloads)")
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="seeds per (strategy, proportion); paper uses 10")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: --scale 1.0 --seeds 10")
+    ap.add_argument("--workloads", nargs="*",
+                    default=["haswell", "knl", "eagle", "theta"])
+    ap.add_argument("--skip-sweeps", action="store_true")
+    ap.add_argument("--no-reuse", action="store_true",
+                    help="recompute sweeps even if artifacts exist")
+    ap.add_argument("--only-cached", action="store_true",
+                    help="render sweeps only from existing artifacts "
+                         "(skip, rather than recompute, missing ones)")
+    args = ap.parse_args(argv)
+    if args.full:
+        args.scale, args.seeds = 1.0, 10
+
+    t0 = time.monotonic()
+    print("#" * 72)
+    print("# Paper tables")
+    print("#" * 72)
+    paper_tables.main(scale=min(args.scale, 0.3))
+    print()
+
+    print("#" * 72)
+    print("# Figures 1-5 analogues (trace twins)")
+    print("#" * 72)
+    print(figures.fig_cleaning(scale=min(args.scale, 0.3)))
+    for name in args.workloads:
+        # eagle's 143k-job trace: keep the figure sim at the sweep's scale
+        fscale = 0.06 if name == "eagle" else min(args.scale, 0.3)
+        print(figures.fig_rigid_util(name, scale=fscale), flush=True)
+        print(figures.fig_distributions(name, scale=fscale), flush=True)
+    print()
+
+    if not args.skip_sweeps:
+        print("#" * 72)
+        print(f"# Malleability sweeps (Figs. 6-9; scale={args.scale}, "
+              f"seeds={args.seeds})")
+        print("#" * 72)
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        for name in args.workloads:
+            cache = ARTIFACTS / f"sweep-{name}.json"
+            if cache.exists() and not args.no_reuse:
+                results = json.loads(cache.read_text())["results"]
+                print(f"[sweep:{name}] reusing {cache}")
+            elif args.only_cached:
+                print(f"[sweep:{name}] no cached sweep artifact; skipping "
+                      f"(run `python -m benchmarks.sweep --workload {name}`)")
+                continue
+            else:
+                results = sweep.sweep_workload(name, scale=args.scale,
+                                               seeds=args.seeds)
+            print()
+            print(figures.render_sweep_table(results))
+            summary = sweep.best_improvements(results)
+            print(f"\n  {name} best-vs-rigid at 100% malleable:")
+            for metric, r in summary.items():
+                print(f"    {metric:<12} {r['rigid']:>12,.1f} -> "
+                      f"{r['best']:>12,.1f}  ({r['improvement_pct']:+6.1f}% "
+                      f"via {r['strategy']})")
+            (ARTIFACTS / f"sweep-{name}.json").write_text(
+                json.dumps({"results": results, "summary": summary},
+                           indent=1, default=float))
+            print()
+
+    print("#" * 72)
+    print("# Roofline — BASELINE (paper-faithful + naive distribution)")
+    print("#" * 72)
+    roofline.main(["--artifacts", str(ARTIFACTS)])
+    if list(ARTIFACTS.glob("dryrun-*-opt.json")):
+        print()
+        print("#" * 72)
+        print("# Roofline — OPTIMIZED (post §Perf hillclimb; see "
+              "EXPERIMENTS.md)")
+        print("#" * 72)
+        roofline.main(["--artifacts", str(ARTIFACTS), "--tag", "opt"])
+
+    print(f"\n[benchmarks] total {time.monotonic()-t0:,.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

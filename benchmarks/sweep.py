@@ -1,0 +1,141 @@
+"""Malleability sweep: the paper's core experiment (Figs. 6-9).
+
+For one workload: proportions 0..100% x strategies x seeds ->
+per-(strategy, proportion) aggregated metrics with IQR, plus the
+improvement-vs-rigid summary the paper's abstract quotes.
+
+CLI:  PYTHONPATH=src python -m benchmarks.sweep --workload haswell \
+          --scale 0.2 --seeds 3 --out artifacts/sweep-haswell.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (CLUSTERS, Window, aggregate_seeds, get_strategy,
+                        improvement, run_metrics, simulate, traces)
+from repro.core.speedup import transform_rigid_to_malleable
+
+PROPORTIONS = (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)
+MALLEABLE_STRATEGIES = ("min", "pref", "avg", "keeppref")
+
+
+def sweep_workload(name: str, *, scale: float = 0.2, seeds: int = 3,
+                   proportions=PROPORTIONS,
+                   strategies=MALLEABLE_STRATEGIES,
+                   backfill_depth: int = 256,
+                   verbose: bool = True) -> Dict:
+    """Returns {"rigid": metrics, (strategy, prop): metrics...} aggregated."""
+    cl = CLUSTERS[name]
+    w_rigid = traces.generate(name, seed=0, scale=scale)
+    window = Window.for_workload(w_rigid)
+
+    t0 = time.monotonic()
+    rigid = run_metrics(simulate(w_rigid, cl, get_strategy("easy"),
+                                 backfill_depth=backfill_depth),
+                        w_rigid, cl, window)
+    if verbose:
+        print(f"[sweep:{name}] rigid: turnaround="
+              f"{rigid['turnaround_mean']:,.0f}s wait="
+              f"{rigid['wait_mean']:,.0f}s util={rigid['utilization']:.3f} "
+              f"({time.monotonic()-t0:.0f}s)")
+
+    results: Dict[str, Dict] = {"rigid": rigid}
+    for strat in strategies:
+        for prop in proportions:
+            if prop == 0.0:
+                results[f"{strat}@0"] = rigid
+                continue
+            per_seed: List[Dict] = []
+            for seed in range(seeds):
+                wm = transform_rigid_to_malleable(w_rigid, prop, seed,
+                                                  cl.nodes)
+                res = simulate(wm, cl, get_strategy(strat),
+                               backfill_depth=backfill_depth)
+                per_seed.append(run_metrics(res, wm, cl, window))
+            agg = aggregate_seeds(per_seed)
+            results[f"{strat}@{int(prop*100)}"] = agg
+            if verbose:
+                print(f"[sweep:{name}] {strat}@{int(prop*100)}%: "
+                      f"turnaround={agg['turnaround_mean_mean']:,.0f}"
+                      f"±{agg['turnaround_mean_iqr']:,.0f} "
+                      f"wait={agg['wait_mean_mean']:,.0f} "
+                      f"util={agg['utilization_mean']:.3f} "
+                      f"expand/job={agg['expand_per_job_mean']:.1f} "
+                      f"shrink/job={agg['shrink_per_job_mean']:.1f}")
+    results["_meta"] = {"workload": name, "scale": scale, "seeds": seeds,
+                        "proportions": list(proportions)}
+    return results
+
+
+def best_improvements(results: Dict) -> Dict[str, Dict[str, float]]:
+    """Paper-abstract summary: best strategy at 100% vs rigid, per metric."""
+    rigid = results["rigid"]
+    out = {}
+    for metric, key in (("turnaround", "turnaround_mean"),
+                        ("makespan", "makespan_mean"),
+                        ("wait", "wait_mean")):
+        best, best_strat = None, None
+        for strat in MALLEABLE_STRATEGIES:
+            r = results.get(f"{strat}@100")
+            if not r:
+                continue
+            v = r.get(f"{key}_mean", np.nan)
+            if np.isfinite(v) and (best is None or v < best):
+                best, best_strat = v, strat
+        if best is not None:
+            out[metric] = {"rigid": rigid[key], "best": best,
+                           "strategy": best_strat,
+                           "improvement_pct": improvement(rigid[key], best)}
+    # utilization: higher is better
+    best, best_strat = None, None
+    for strat in MALLEABLE_STRATEGIES:
+        r = results.get(f"{strat}@100")
+        if not r:
+            continue
+        v = r.get("utilization_mean", np.nan)
+        if np.isfinite(v) and (best is None or v > best):
+            best, best_strat = v, strat
+    if best is not None:
+        out["utilization"] = {
+            "rigid": rigid["utilization"], "best": best,
+            "strategy": best_strat,
+            "improvement_pct": 100.0 * (best - rigid["utilization"])
+            / max(rigid["utilization"], 1e-9)}
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", required=True,
+                    choices=["haswell", "knl", "eagle", "theta"])
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--proportions", type=float, nargs="*",
+                    default=list(PROPORTIONS))
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    results = sweep_workload(args.workload, scale=args.scale,
+                             seeds=args.seeds,
+                             proportions=tuple(args.proportions))
+    summary = best_improvements(results)
+    print(f"\n[sweep:{args.workload}] best-vs-rigid (100% malleable):")
+    for metric, r in summary.items():
+        print(f"  {metric}: {r['rigid']:,.1f} -> {r['best']:,.1f} "
+              f"({r['improvement_pct']:+.1f}% via {r['strategy']})")
+    if args.out:
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"results": results, "summary": summary}, indent=1,
+            default=float))
+        print(f"[sweep:{args.workload}] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: the paper's result in 60 seconds.
+
+1. Generate a statistical twin of the Cori-Haswell workload (reduced).
+2. Simulate rigid EASY-backfill vs. the paper's malleable strategies.
+3. Print the headline improvements (turnaround / wait / utilization).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (CLUSTERS, get_strategy, improvement, run_metrics,
+                        simulate, traces)
+from repro.core.speedup import transform_rigid_to_malleable
+
+SCALE = 0.1          # 10% of the 5-day / 28k-job Haswell trace
+MALLEABLE = 0.4      # 40% malleable jobs — the paper's "modest adoption"
+
+cluster = CLUSTERS["haswell"]
+rigid = traces.generate("haswell", seed=0, scale=SCALE)
+print(f"workload: {rigid.n_jobs:,} jobs on {cluster.nodes:,} nodes "
+      f"(tick {cluster.tick:.0f}s)")
+
+base = run_metrics(simulate(rigid, cluster, get_strategy("easy")),
+                   rigid, cluster)
+print(f"\nrigid EASY-backfill:  turnaround {base['turnaround_mean']:,.0f}s"
+      f"  wait {base['wait_mean']:,.0f}s"
+      f"  utilization {base['utilization']*100:.1f}%")
+
+for name in ("min", "pref", "avg", "keeppref"):
+    w = transform_rigid_to_malleable(rigid, MALLEABLE, seed=1,
+                                     cluster_nodes=cluster.nodes)
+    m = run_metrics(simulate(w, cluster, get_strategy(name)), w, cluster)
+    print(f"{name:>9} @ {MALLEABLE:.0%} malleable:"
+          f"  turnaround {m['turnaround_mean']:,.0f}s"
+          f" ({improvement(base['turnaround_mean'], m['turnaround_mean']):+.0f}%)"
+          f"  wait {m['wait_mean']:,.0f}s"
+          f"  util {m['utilization']*100:.1f}%"
+          f"  expand/job {m['expand_per_job']:.1f}")
+
+print("\n(paper: turnaround -37..67%, wait -73..99%, util +5..52% at "
+      "100% malleability; gains already substantial at 20%)")

@@ -1,0 +1,56 @@
+"""Batched serving with continuous batching — and a malleable twist.
+
+Serves a reduced-config LM with the production engine, then *shrinks* the
+engine (fewer slots, as a scheduler reclaiming nodes would) mid-stream and
+keeps serving: the serving deployment is one malleable job whose slot count
+tracks its allocation.
+
+Run:  PYTHONPATH=src python examples/serving.py [--arch glm4-9b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models.transformer import init_params, param_count
+from repro.serve.engine import Request, ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="glm4-9b", choices=list(list_archs()))
+ap.add_argument("--requests", type=int, default=10)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+params = init_params(jax.random.key(0), cfg)
+print(f"serving {cfg.name}: {param_count(params):,} params")
+
+rng = np.random.default_rng(0)
+reqs = [Request(rid=i,
+                prompt=rng.integers(2, cfg.vocab, size=int(rng.integers(4, 20))
+                                    ).astype(np.int32),
+                max_new_tokens=12)
+        for i in range(args.requests)]
+
+# phase 1: full allocation (4 slots)
+eng = ServeEngine(params, cfg, n_slots=4, max_len=64)
+for r in reqs[: args.requests // 2]:
+    eng.submit(r)
+t0 = time.monotonic()
+eng.run_until_drained()
+print(f"phase 1 (4 slots): {args.requests//2} requests, "
+      f"{eng.steps} steps, {time.monotonic()-t0:.1f}s")
+
+# phase 2: the scheduler reclaimed half the nodes -> rebuild with 2 slots
+eng2 = ServeEngine(params, cfg, n_slots=2, max_len=64)
+for r in reqs[args.requests // 2:]:
+    eng2.submit(r)
+t0 = time.monotonic()
+eng2.run_until_drained()
+print(f"phase 2 (2 slots after shrink): {args.requests - args.requests//2} "
+      f"requests, {eng2.steps} steps, {time.monotonic()-t0:.1f}s")
+
+done = sum(r.done for r in reqs)
+print(f"\n{done}/{len(reqs)} requests completed; sample output:",
+      reqs[0].out_tokens[:8])

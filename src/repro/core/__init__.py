@@ -1,0 +1,35 @@
+# The paper's primary contribution: malleable job scheduling.
+#
+# - strategies: EASY-BACKFILL (rigid) + MIN / PREF / AVG / KEEPPREF (paper §2.1)
+# - simulator:  event-quantized-tick DES, bit-equivalent to per-tick ElastiSim
+# - sim_jax:    fully-jittable lax.scan variant of the same scheduling math
+# - speedup:    efficiency-threshold rigid->malleable transform (paper §2.2)
+# - traces:     statistical twins of Haswell/KNL/Eagle/Theta + cleaning
+# - metrics:    turnaround/makespan/wait/utilization with warm-up & drain-down
+from .cluster import CLUSTERS, Cluster, EAGLE, HASWELL, KNL, THETA
+from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
+from .metrics import Window, aggregate_seeds, improvement, iqr, run_metrics
+from .redistribute import (balanced_expand, balanced_shrink, greedy_expand,
+                           greedy_shrink)
+from .simulator import SimResult, Simulator, simulate
+from .speedup import (TabulatedSpeedup, TransformConfig, amdahl_efficiency,
+                      amdahl_speedup, nodes_at_efficiency,
+                      pfrac_for_reference_efficiency, progress_rate,
+                      transform_rigid_to_malleable)
+from .strategies import (AVG, EASY, KEEPPREF, MIN, PREF, STRATEGIES, Strategy,
+                         get_strategy)
+from . import traces
+
+__all__ = [
+    "CLUSTERS", "Cluster", "EAGLE", "HASWELL", "KNL", "THETA",
+    "DONE", "PENDING", "QUEUED", "RUNNING", "Workload",
+    "Window", "aggregate_seeds", "improvement", "iqr", "run_metrics",
+    "balanced_expand", "balanced_shrink", "greedy_expand", "greedy_shrink",
+    "SimResult", "Simulator", "simulate",
+    "TabulatedSpeedup", "TransformConfig", "amdahl_efficiency",
+    "amdahl_speedup", "nodes_at_efficiency",
+    "pfrac_for_reference_efficiency", "progress_rate",
+    "transform_rigid_to_malleable",
+    "AVG", "EASY", "KEEPPREF", "MIN", "PREF", "STRATEGIES", "Strategy",
+    "get_strategy", "traces",
+]

@@ -1,0 +1,114 @@
+"""Evaluation metrics (paper §2.1 "Metrics" and §2.3 methodology).
+
+Per-run metrics are computed inside the measurement window
+``[warmup_end, last_submission]`` (paper Fig. 2: red lines), excluding the
+12 h warm-up and the drain-down after the final submission.  Across seeds we
+report means and interquartile ranges (IQR) — the paper prefers IQR over
+standard deviation for non-normal workload metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .cluster import Cluster
+from .jobs import Workload
+from .simulator import SimResult
+
+WARMUP_SECONDS = 12 * 3600.0  # paper §2.3
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """Measurement window [t0, t1]."""
+
+    t0: float
+    t1: float
+
+    @staticmethod
+    def for_workload(workload: Workload, warmup: float = WARMUP_SECONDS) -> "Window":
+        """Paper window: skip ``warmup``, stop at the last submission.
+
+        For scaled-down traces the 12 h warm-up is capped at 20% of the
+        trace span so the window never degenerates.
+        """
+        last_submit = float(np.max(workload.submit))
+        t0 = min(warmup, 0.2 * last_submit)
+        return Window(t0=t0, t1=last_submit)
+
+
+def run_metrics(
+    result: SimResult,
+    workload: Workload,
+    cluster: Cluster,
+    window: Window | None = None,
+) -> Dict[str, float]:
+    """Metrics of a single simulation run.
+
+    Job metrics average over jobs *submitted* inside the window; utilization
+    integrates busy nodes over the window.  Expand/shrink ops are reported
+    per malleable job (submitted in-window), matching the paper's
+    "operations per job" panels (Figs. 6e/f …).
+    """
+    w = workload
+    if window is None:
+        window = Window.for_workload(w)
+    in_win = (w.submit >= window.t0) & (w.submit <= window.t1)
+    done = np.isfinite(result.end)
+    sel = in_win & done
+    n_sel = int(np.sum(sel))
+
+    wait = result.start[sel] - w.submit[sel]
+    makespan = result.end[sel] - result.start[sel]
+    turnaround = result.end[sel] - w.submit[sel]
+
+    dur = max(window.t1 - window.t0, 1e-9)
+    util = result.busy_integral(window.t0, window.t1) / (cluster.nodes * dur)
+
+    msel = sel & w.malleable
+    n_mall = int(np.sum(msel))
+    expand = float(np.sum(result.expand_ops[msel])) / max(n_mall, 1)
+    shrink = float(np.sum(result.shrink_ops[msel])) / max(n_mall, 1)
+
+    return {
+        "n_jobs": float(n_sel),
+        "n_malleable": float(n_mall),
+        "wait_mean": float(np.mean(wait)) if n_sel else np.nan,
+        "wait_p50": float(np.median(wait)) if n_sel else np.nan,
+        "makespan_mean": float(np.mean(makespan)) if n_sel else np.nan,
+        "turnaround_mean": float(np.mean(turnaround)) if n_sel else np.nan,
+        "turnaround_p50": float(np.median(turnaround)) if n_sel else np.nan,
+        "utilization": float(util),
+        "expand_per_job": expand,
+        "shrink_per_job": shrink,
+        "unfinished": float(np.sum(in_win & ~done)),
+    }
+
+
+def iqr(values: Sequence[float]) -> float:
+    v = np.asarray(values, dtype=np.float64)
+    v = v[np.isfinite(v)]
+    if len(v) == 0:
+        return np.nan
+    return float(np.percentile(v, 75) - np.percentile(v, 25))
+
+
+def aggregate_seeds(per_seed: List[Dict[str, float]]) -> Dict[str, float]:
+    """Mean and IQR over seed runs (paper: 10 seeds, IQR error bars)."""
+    out: Dict[str, float] = {}
+    keys = per_seed[0].keys()
+    for k in keys:
+        vals = [m[k] for m in per_seed]
+        finite = [v for v in vals if np.isfinite(v)]
+        out[f"{k}_mean"] = float(np.mean(finite)) if finite else np.nan
+        out[f"{k}_iqr"] = iqr(vals)
+    return out
+
+
+def improvement(baseline: float, value: float) -> float:
+    """Relative improvement in % (positive = better for time metrics)."""
+    if baseline == 0:
+        return np.nan
+    return 100.0 * (baseline - value) / baseline

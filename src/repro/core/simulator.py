@@ -1,0 +1,399 @@
+"""Event-quantized-tick discrete-event simulator (ElastiSim-equivalent).
+
+ElastiSim invokes the scheduler every tick (paper Table 2: 1 s / 10 s).  All
+five strategies are *deterministic functions of cluster state*, and state
+only changes at job submission/completion; scheduler decisions therefore can
+only change on the first tick after an event.  This engine runs the scheduler
+exactly at those ticks and is bit-equivalent to dense per-tick simulation
+(verified by ``tests/test_simulator.py::test_tick_equivalence``) while being
+O(#events) instead of O(#ticks).
+
+Scheduling per invocation (paper §2.1):
+  Step 1  EASY-backfill start pass (per-strategy start allocations).
+  Step 2  While the queue head cannot start and running malleable jobs can be
+          shrunk enough to admit it: shrink (greedy in priority order, or
+          balanced for AVG) and start.
+  Step 3  Expand running malleable jobs into any remaining idle nodes
+          (greedy lowest-priority-first, or balanced for AVG).
+
+Expand/shrink operations are counted as the *net* per-invocation allocation
+change of each running malleable job, matching ElastiSim's one-reconfiguration
+-per-scheduling-point semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .cluster import Cluster
+from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
+from .redistribute import (balanced_expand, balanced_shrink, greedy_expand,
+                           greedy_shrink)
+from .speedup import amdahl_speedup
+from .strategies import Strategy
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Per-job outcomes plus the piecewise-constant utilization timeline."""
+
+    start: np.ndarray
+    end: np.ndarray
+    expand_ops: np.ndarray
+    shrink_ops: np.ndarray
+    util_t: np.ndarray       # breakpoint times
+    util_nodes: np.ndarray   # busy nodes on [util_t[k], util_t[k+1])
+    n_sched_calls: int
+    sim_seconds: float       # wall-clock cost of the simulation itself
+    finished: bool
+    end_time: float
+
+    def busy_integral(self, t0: float, t1: float) -> float:
+        """∫ busy dt over [t0, t1] from the breakpoint timeline."""
+        ts = np.append(self.util_t, max(self.end_time, self.util_t[-1]))
+        lo = np.maximum(ts[:-1], t0)
+        hi = np.minimum(ts[1:], t1)
+        return float(np.sum(np.maximum(hi - lo, 0.0) * self.util_nodes))
+
+
+class _RunningSet:
+    """Append/compress int-id set backed by a preallocated array."""
+
+    def __init__(self, capacity: int):
+        self._buf = np.empty(capacity, dtype=np.int64)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def ids(self) -> np.ndarray:
+        return self._buf[: self._n]
+
+    def add(self, job: int) -> None:
+        self._buf[self._n] = job
+        self._n += 1
+
+    def remove_mask(self, done_mask: np.ndarray) -> np.ndarray:
+        """Drop ids where done_mask is True; returns the dropped ids."""
+        ids = self.ids
+        dropped = ids[done_mask].copy()
+        kept = ids[~done_mask]
+        self._buf[: len(kept)] = kept
+        self._n = len(kept)
+        return dropped
+
+
+class Simulator:
+    """Simulate ``workload`` on ``cluster`` under ``strategy``."""
+
+    def __init__(
+        self,
+        workload: Workload,
+        cluster: Cluster,
+        strategy: Strategy,
+        backfill_depth: int = 256,
+        dense_ticks: bool = False,
+    ):
+        workload.validate(cluster.nodes)
+        self.w = workload
+        self.cluster = cluster
+        self.strategy = strategy
+        self.backfill_depth = backfill_depth
+        self.dense_ticks = dense_ticks  # force per-tick scheduling (tests)
+        w = workload
+        self._s_ref = amdahl_speedup(w.nodes_req, w.pfrac)
+        # Static per-job start policies (paper §2.1 Step 1).
+        if strategy.malleable:
+            def pick(which):
+                arr = {"min": w.min_nodes, "pref": w.pref_nodes,
+                       "req": w.nodes_req}[which]
+                return np.where(w.malleable, arr, w.nodes_req)
+            self._start_want = pick(strategy.start_want)
+            self._start_floor = pick(strategy.start_floor)
+            self._shrink_floor = pick(strategy.shrink_floor)
+        else:
+            self._start_want = w.nodes_req.copy()
+            self._start_floor = w.nodes_req.copy()
+            self._shrink_floor = w.nodes_req.copy()
+        # est remaining duration at alloc a = remaining * _wall_work / S(a)
+        self._wall_work = w.walltime * self._s_ref
+
+    def _est_duration(self, jobs, alloc, remaining) -> np.ndarray:
+        """Walltime-padded remaining-duration estimate at allocation alloc."""
+        s = amdahl_speedup(alloc, self.w.pfrac[jobs])
+        return remaining * self._wall_work[jobs] / s
+
+    # -- main loop ------------------------------------------------------
+    def run(self, horizon: Optional[float] = None) -> SimResult:
+        wall0 = _time.monotonic()
+        w, cl, strat = self.w, self.cluster, self.strategy
+        n = w.n_jobs
+        tick = cl.tick
+        start_want, start_floor = self._start_want, self._start_floor
+        shrink_floor = self._shrink_floor
+        pfrac, s_ref, wall_work = w.pfrac, self._s_ref, self._wall_work
+
+        state = np.full(n, PENDING, dtype=np.int8)
+        alloc = np.zeros(n, dtype=np.int64)
+        remaining = np.ones(n, dtype=np.float64)
+        start_t = np.full(n, np.nan)
+        end_t = np.full(n, np.nan)
+        expand_ops = np.zeros(n, dtype=np.int64)
+        shrink_ops = np.zeros(n, dtype=np.int64)
+
+        order = np.argsort(w.submit, kind="stable")
+        aptr = 0
+        queue: deque = deque()
+        running = _RunningSet(n)
+        busy = 0
+        t = 0.0
+        util_t = [0.0]
+        util_nodes = [0]
+        n_sched = 0
+
+        def record_busy(at: float) -> None:
+            if util_nodes[-1] != busy:
+                if util_t[-1] == at:
+                    util_nodes[-1] = busy
+                    if len(util_t) > 1 and util_nodes[-2] == busy:
+                        util_t.pop(); util_nodes.pop()
+                else:
+                    util_t.append(at)
+                    util_nodes.append(busy)
+
+        def rates_of(ids: np.ndarray) -> np.ndarray:
+            s = amdahl_speedup(alloc[ids], pfrac[ids])
+            return s / (s_ref[ids] * w.runtime[ids])
+
+        def advance_to(t_target: float) -> None:
+            nonlocal t, busy
+            while True:
+                ids = running.ids
+                if len(ids) == 0:
+                    t = t_target
+                    return
+                r = rates_of(ids)
+                fins = t + remaining[ids] / r
+                tmin = fins.min()
+                if tmin <= t_target + _EPS:
+                    dt = max(tmin - t, 0.0)
+                    remaining[ids] -= dt * r
+                    t = tmin
+                    done = remaining[ids] <= _EPS
+                    dropped = running.remove_mask(done)
+                    state[dropped] = DONE
+                    end_t[dropped] = t
+                    remaining[dropped] = 0.0
+                    busy -= int(alloc[dropped].sum())
+                    record_busy(t)
+                else:
+                    remaining[ids] -= (t_target - t) * r
+                    t = t_target
+                    return
+
+        # -- one scheduler invocation (Steps 1-3) ------------------------
+        sched_changed = False  # any start/resize in the current pass
+
+        def do_start(j: int, a: int) -> None:
+            nonlocal busy, sched_changed
+            state[j] = RUNNING
+            alloc[j] = a
+            start_t[j] = t
+            running.add(j)
+            busy += int(a)
+            sched_changed = True
+
+        def start_pass() -> None:
+            nonlocal busy
+            # greedy FCFS prefix
+            while queue:
+                j = queue[0]
+                free = cl.nodes - busy
+                if start_floor[j] <= free:
+                    do_start(j, int(min(start_want[j], free)))
+                    queue.popleft()
+                else:
+                    break
+            if not queue:
+                return
+            # head blocked: single EASY reservation + bounded backfill scan
+            free = cl.nodes - busy
+            head = queue[0]
+            floor_h = int(start_floor[head])
+            ids = running.ids
+            if len(ids) == 0:
+                return  # unreachable: head always fits an empty cluster
+            ests = t + self._est_duration(ids, alloc[ids], remaining[ids])
+            srt = np.argsort(ests, kind="stable")
+            cumfree = free + np.cumsum(alloc[ids][srt])
+            k = int(np.searchsorted(cumfree, floor_h))
+            k = min(k, len(ids) - 1)
+            shadow = float(ests[srt][k])
+            extra = int(cumfree[k]) - floor_h
+
+            started = []
+            for j in list(queue)[1 : 1 + self.backfill_depth]:
+                free = cl.nodes - busy
+                if free == 0:
+                    break
+                floor_j = int(start_floor[j])
+                if floor_j > free:
+                    continue
+                want_j = int(start_want[j])
+                for a_try in dict.fromkeys([min(want_j, free), floor_j]):
+                    s = amdahl_speedup(float(a_try), pfrac[j])
+                    est = wall_work[j] / s
+                    if t + est <= shadow + _EPS:
+                        pass  # finishes before the reservation
+                    elif a_try <= extra:
+                        extra -= a_try  # runs past shadow inside spare nodes
+                    else:
+                        continue
+                    do_start(j, a_try)
+                    started.append(j)
+                    break
+            if started:
+                sset = set(started)
+                remain = [j for j in queue if j not in sset]
+                queue.clear()
+                queue.extend(remain)
+
+        def resize_running(new_alloc_m: np.ndarray, m_ids: np.ndarray) -> None:
+            nonlocal busy, sched_changed
+            delta = new_alloc_m - alloc[m_ids]
+            if np.any(delta != 0):
+                sched_changed = True
+            alloc[m_ids] = new_alloc_m
+            busy += int(delta.sum())
+
+        def schedule_once() -> None:
+            nonlocal busy
+            start_pass()
+            if strat.malleable:
+                # Step 2: shrink to admit the blocked head, repeatedly.
+                while queue:
+                    head = queue[0]
+                    floor_h = int(start_floor[head])
+                    free = cl.nodes - busy
+                    deficit = floor_h - free
+                    if deficit <= 0:
+                        break  # start_pass already ran; nothing blocked
+                    ids = running.ids
+                    m = ids[w.malleable[ids]]
+                    if len(m) == 0:
+                        break
+                    floor_arr = np.minimum(shrink_floor[m], alloc[m])
+                    surplus = int(np.sum(alloc[m] - floor_arr))
+                    if surplus < deficit:
+                        break  # shrinking cannot admit the head
+                    if strat.balanced:
+                        new_alloc = balanced_shrink(
+                            alloc[m], floor_arr, w.max_nodes[m], deficit, xp=np)
+                    else:
+                        pr = strat.priority(alloc[m], w.min_nodes[m],
+                                            w.max_nodes[m], w.pref_nodes[m], np)
+                        new_alloc = greedy_shrink(alloc[m], floor_arr, pr,
+                                                  deficit, xp=np)
+                    resize_running(new_alloc, m)
+                    start_pass()
+                # Step 3: expand running malleable jobs into idle nodes.
+                free = cl.nodes - busy
+                ids = running.ids
+                m = ids[w.malleable[ids]]
+                if len(m) > 0 and not np.any(alloc[m] < w.max_nodes[m]):
+                    m = m[:0]  # everything at max: expansion is a no-op
+                if free > 0 and len(m) > 0:
+                    if strat.balanced:
+                        new_alloc = balanced_expand(
+                            alloc[m], w.min_nodes[m], w.max_nodes[m], free, xp=np)
+                    else:
+                        pr = strat.priority(alloc[m], w.min_nodes[m],
+                                            w.max_nodes[m], w.pref_nodes[m], np)
+                        new_alloc = greedy_expand(alloc[m], w.max_nodes[m], pr,
+                                                  free, xp=np)
+                    resize_running(new_alloc, m)
+
+        def schedule() -> None:
+            """Run steps 1-3 to fixpoint.
+
+            A single 1-2-3 pass is not idempotent: Step-3 expansion changes
+            running jobs' estimated ends, which can widen the backfill
+            window seen by the *next* invocation.  Dense per-tick ElastiSim
+            converges over subsequent (event-free) ticks; iterating to
+            fixpoint here reproduces exactly that converged schedule and
+            keeps event-quantization bit-equivalent (test_tick_equivalence).
+            """
+            nonlocal n_sched, sched_changed
+            n_sched += 1
+            ids0 = running.ids.copy()
+            m0 = ids0[w.malleable[ids0]]
+            alloc0 = alloc[m0].copy()
+
+            for _ in range(10_000):
+                sched_changed = False
+                schedule_once()
+                if not sched_changed:
+                    break
+            else:  # pragma: no cover
+                raise RuntimeError("scheduler failed to reach a fixpoint")
+
+            # net per-invocation op accounting on jobs running throughout
+            if len(m0):
+                still = state[m0] == RUNNING
+                d = alloc[m0] - alloc0
+                expand_ops[m0[still & (d > 0)]] += 1
+                shrink_ops[m0[still & (d < 0)]] += 1
+            record_busy(t)
+
+        # -- event loop ---------------------------------------------------
+        submit_sorted = w.submit[order]
+        finished = True
+        while aptr < n or len(running):
+            ids = running.ids
+            if len(ids):
+                r = rates_of(ids)
+                t_fin = float((t + remaining[ids] / r).min())
+            else:
+                t_fin = np.inf
+            t_sub = float(submit_sorted[aptr]) if aptr < n else np.inf
+            t_event = min(t_fin, t_sub)
+            if not np.isfinite(t_event):
+                break
+            if horizon is not None and t_event > horizon:
+                finished = False
+                advance_to(horizon)
+                break
+            if self.dense_ticks:
+                t_sched = np.floor(t / tick + 1.0) * tick
+                t_sched = min(t_sched, np.ceil(t_event / tick - _EPS) * tick)
+            else:
+                t_sched = np.ceil(t_event / tick - _EPS) * tick
+            t_sched = max(float(t_sched), 0.0)
+            advance_to(t_sched)
+            while aptr < n and submit_sorted[aptr] <= t + _EPS:
+                j = int(order[aptr])
+                state[j] = QUEUED
+                queue.append(j)
+                aptr += 1
+            schedule()
+
+        return SimResult(
+            start=start_t, end=end_t,
+            expand_ops=expand_ops, shrink_ops=shrink_ops,
+            util_t=np.asarray(util_t), util_nodes=np.asarray(util_nodes),
+            n_sched_calls=n_sched,
+            sim_seconds=_time.monotonic() - wall0,
+            finished=finished, end_time=t,
+        )
+
+
+def simulate(workload: Workload, cluster: Cluster, strategy: Strategy,
+             **kw) -> SimResult:
+    return Simulator(workload, cluster, strategy, **kw).run()

@@ -1,0 +1,179 @@
+"""Speedup model and the rigid -> malleable transformation (paper §2.2).
+
+The paper converts rigid trace jobs into malleable ones "using a speedup
+model with efficiency thresholds to ensure realistic scaling behavior" [17].
+We implement that model as a per-job Amdahl curve
+
+    S(n) = 1 / ((1 - p) + p / n),        E(n) = S(n) / n,
+
+where the parallel fraction ``p`` is *calibrated* so that the job's observed
+allocation ``nodes_req`` runs at a sampled reference efficiency
+``e_ref ~ U(e_ref_range)``.  The malleable range then follows from
+efficiency thresholds:
+
+    pref = largest n with E(n) >= e_pref   (speed/efficiency trade-off [5])
+    max  = largest n with E(n) >= e_min
+    min  = max(1, nodes_req // 2)
+
+capped by configurable multiples of the rigid request and cluster size.
+
+Beyond the paper (addressing its Limitation §4 ¶4 — "heuristic model"), we
+also provide :class:`TabulatedSpeedup` so ML jobs can use a *roofline-derived*
+speedup curve S(n) = T(1)/T(n) with T(n) = max(compute/n, memory/n, coll(n)),
+built from the dry-run cost analysis of a concrete architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .jobs import Workload
+
+
+# ----------------------------------------------------------------------
+# Amdahl speedup (vectorized over jobs; also jnp-compatible shapes).
+def amdahl_speedup(n, p):
+    """S(n) for parallel fraction p. Works on numpy or jax arrays."""
+    n = np.maximum(np.asarray(n, dtype=np.float64), 1.0)
+    return 1.0 / ((1.0 - p) + p / n)
+
+
+def amdahl_efficiency(n, p):
+    return amdahl_speedup(n, p) / np.maximum(np.asarray(n, dtype=np.float64), 1.0)
+
+
+def pfrac_for_reference_efficiency(n_ref, e_ref):
+    """Parallel fraction p such that E(n_ref) == e_ref.
+
+    E(n) = 1 / (n (1-p) + p)  ==>  p = (n - 1/e) / (n - 1)   for n > 1.
+    For single-node jobs we calibrate at n = 2 instead (p = 2 - 1/e), i.e.
+    "if this job were run on two nodes it would reach e_ref efficiency".
+    """
+    n = np.asarray(n_ref, dtype=np.float64)
+    e = np.asarray(e_ref, dtype=np.float64)
+    multi = n > 1.0
+    p_multi = (n - 1.0 / e) / np.maximum(n - 1.0, 1e-12)
+    p_single = 2.0 - 1.0 / e
+    p = np.where(multi, p_multi, p_single)
+    return np.clip(p, 0.0, 1.0 - 1e-9)
+
+
+def nodes_at_efficiency(p, e):
+    """Largest n with E(n) >= e:  n <= (1/e - p) / (1 - p)."""
+    p = np.asarray(p, dtype=np.float64)
+    n = (1.0 / e - p) / np.maximum(1.0 - p, 1e-12)
+    return np.maximum(np.floor(n + 1e-9).astype(np.int64), 1)
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransformConfig:
+    """Knobs of the rigid -> malleable transformation."""
+
+    e_ref_range: tuple = (0.75, 0.9)  # sampled reference efficiency at n_req
+    e_pref: float = 0.7               # efficiency threshold for pref nodes
+    e_min: float = 0.5                # efficiency threshold for max nodes
+    min_divisor: int = 2              # min = max(1, n_req // min_divisor)
+    pref_cap_factor: int = 2          # pref <= pref_cap_factor * n_req
+    max_cap_factor: int = 4           # max  <= max_cap_factor * n_req
+
+
+def transform_rigid_to_malleable(
+    workload: Workload,
+    proportion: float,
+    seed: int,
+    cluster_nodes: int,
+    config: TransformConfig = TransformConfig(),
+) -> Workload:
+    """Convert a random ``proportion`` of jobs to malleable variants.
+
+    Matches the paper's methodology (§2.3): the *same* workload is reused
+    across proportions; a pseudo-random seed selects which jobs become
+    malleable, and results are averaged over seeds.
+    """
+    if not 0.0 <= proportion <= 1.0:
+        raise ValueError(f"proportion must be in [0,1], got {proportion}")
+    w = workload.copy()
+    n = w.n_jobs
+    rng = np.random.default_rng(seed)
+    k = int(round(proportion * n))
+    chosen = rng.permutation(n)[:k]
+
+    e_ref = rng.uniform(*config.e_ref_range, size=n)
+    p = pfrac_for_reference_efficiency(w.nodes_req, e_ref)
+
+    pref = nodes_at_efficiency(p, config.e_pref)
+    mx = nodes_at_efficiency(p, config.e_min)
+    mn = np.maximum(1, w.nodes_req // config.min_divisor)
+
+    pref = np.minimum(pref, config.pref_cap_factor * w.nodes_req)
+    mx = np.minimum(mx, config.max_cap_factor * w.nodes_req)
+    mx = np.minimum(mx, cluster_nodes)
+    pref = np.minimum(pref, mx)
+    # keep ordering min <= pref <= max; never let pref drop below the rigid
+    # request's half (jobs stay near their observed scale).
+    pref = np.maximum(pref, mn)
+    mx = np.maximum(mx, pref)
+    mn = np.minimum(mn, pref)
+
+    mask = np.zeros(n, dtype=bool)
+    mask[chosen] = True
+    w.malleable = mask
+    w.pfrac = np.where(mask, p, w.pfrac)
+    w.min_nodes = np.where(mask, mn, w.nodes_req)
+    w.max_nodes = np.where(mask, mx, w.nodes_req)
+    w.pref_nodes = np.where(mask, pref, w.nodes_req)
+    w.validate(cluster_nodes)
+    return w
+
+
+# ----------------------------------------------------------------------
+# Rate helpers used by the simulators.  A job's total work is normalized to
+# 1.0; at allocation ``a`` it progresses at ``rate(a)`` fractions/second so
+# that running at the reference allocation reproduces the trace runtime:
+#     rate(a) = S(a) / (S(n_req) * runtime_ref).
+def progress_rate(alloc, pfrac, nodes_req, runtime):
+    s_ref = amdahl_speedup(nodes_req, pfrac)
+    s_cur = amdahl_speedup(alloc, pfrac)
+    return s_cur / (s_ref * np.asarray(runtime, dtype=np.float64))
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TabulatedSpeedup:
+    """Roofline-derived speedup table for ML jobs (beyond-paper).
+
+    ``nodes`` must be ascending; ``speedup`` is S(nodes[i]) relative to
+    nodes[0].  Lookup interpolates geometrically between entries.
+    """
+
+    nodes: Sequence[int]
+    speedup: Sequence[float]
+
+    def __call__(self, n) -> np.ndarray:
+        xs = np.log(np.asarray(self.nodes, dtype=np.float64))
+        ys = np.log(np.asarray(self.speedup, dtype=np.float64))
+        q = np.log(np.maximum(np.asarray(n, dtype=np.float64), 1.0))
+        return np.exp(np.interp(q, xs, ys))
+
+    @staticmethod
+    def from_roofline(
+        nodes: Sequence[int],
+        compute_s: float,
+        memory_s: float,
+        collective_s_per_node: Optional[Sequence[float]] = None,
+    ) -> "TabulatedSpeedup":
+        """Build S(n) from per-job roofline terms measured at n=1.
+
+        T(n) = max(compute_s / n, memory_s / n, coll(n)); collective term
+        defaults to a ring all-reduce model ~ 2*(n-1)/n * grad_bytes/link,
+        here abstracted as a provided per-n sequence.
+        """
+        ts = []
+        for i, n in enumerate(nodes):
+            coll = collective_s_per_node[i] if collective_s_per_node else 0.0
+            ts.append(max(compute_s / n, memory_s / n, coll))
+        s = [ts[0] / t for t in ts]
+        return TabulatedSpeedup(nodes=list(nodes), speedup=s)

@@ -1,0 +1,102 @@
+"""The five job-scheduling strategies (paper §2.1).
+
+Each strategy is a small declarative object consumed by the simulator:
+
+  * ``start_want``  — allocation a malleable job *attempts* to start with
+                      (Step 1).
+  * ``start_floor`` — smallest allocation it may start with.  PREF falls
+                      back to fewer nodes (floor = min); KEEPPREF never
+                      starts below pref.
+  * ``shrink_floor``— smallest allocation Step 2 may shrink a running job
+                      to.  KEEPPREF only shrinks jobs above pref.
+  * ``priority``    — Eqs. 1-3; Step 2 shrinks highest-priority first,
+                      Step 3 expands lowest-priority first.
+  * ``balanced``    — AVG redistributes across *all* malleable jobs;
+                      the others touch the smallest number of jobs.
+
+The priority functions are pure and jnp-compatible — the numpy DES, the
+`lax.scan` simulator and the Pallas waterfill wrapper share them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+def priority_min(cur, mn, mx, pref, xp):
+    """Eq. 1: surplus of allocated over minimum nodes."""
+    del mx, pref, xp
+    return cur - mn
+
+
+def priority_pref(cur, mn, mx, pref, xp):
+    """Eq. 2: surplus of allocated over preferred nodes."""
+    del mn, mx, xp
+    return cur - pref
+
+
+def priority_avg(cur, mn, mx, pref, xp):
+    """Eq. 3: relative utilization within the [min, max] range."""
+    del pref
+    span = xp.maximum(mx - mn, 1)
+    return (cur - mn) / span
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str
+    malleable: bool            # False => rigid EASY-BACKFILL baseline
+    start_want: str = "req"    # one of req|min|pref
+    start_floor: str = "req"   # one of req|min|pref
+    shrink_floor: str = "min"  # one of min|pref
+    balanced: bool = False     # AVG-style balanced redistribution
+    priority: Callable = priority_min
+
+    def pick(self, which: str, mn, pref, req):
+        """Select an allocation array by policy name."""
+        return {"min": mn, "pref": pref, "req": req}[which]
+
+
+# Rigid baseline: malleable metadata ignored; every job starts at its rigid
+# request and is never resized.
+EASY = Strategy(name="easy", malleable=False)
+
+# MIN (paper Eq. 1): start at min; shrink floor min; smallest #jobs resized.
+MIN = Strategy(
+    name="min", malleable=True,
+    start_want="min", start_floor="min",
+    shrink_floor="min", priority=priority_min,
+)
+
+# PREF (paper Eq. 2): attempt preferred, fall back to fewer (>= min).
+PREF = Strategy(
+    name="pref", malleable=True,
+    start_want="pref", start_floor="min",
+    shrink_floor="min", priority=priority_pref,
+)
+
+# AVG (paper Eq. 3): start at min; balanced redistribution over all jobs.
+AVG = Strategy(
+    name="avg", malleable=True,
+    start_want="min", start_floor="min",
+    shrink_floor="min", balanced=True, priority=priority_avg,
+)
+
+# KEEPPREF (novel in the paper): always start at preferred; only shrink jobs
+# currently above preferred (shrink floor = pref).
+KEEPPREF = Strategy(
+    name="keeppref", malleable=True,
+    start_want="pref", start_floor="pref",
+    shrink_floor="pref", priority=priority_pref,
+)
+
+STRATEGIES = {s.name: s for s in (EASY, MIN, PREF, AVG, KEEPPREF)}
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return STRATEGIES[name.lower()]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; choose from {sorted(STRATEGIES)}"
+        ) from None

@@ -1,0 +1,1 @@
+from . import checkpoint, compression, failures, manager, resharding  # noqa: F401

@@ -1,0 +1,122 @@
+"""Sharded npz checkpointing with a JSON manifest (fault tolerance).
+
+Layout:  <dir>/step_<N>/manifest.json + shard_<k>.npz
+The manifest records the flattened tree structure (key paths), shapes,
+dtypes and shard assignment, so a restore can target a *different* mesh /
+process count than the save — the basis for elastic resume
+(:mod:`repro.elastic.resharding`).  Writes are atomic (tmp dir + rename) and
+old checkpoints are garbage-collected with ``keep``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Params,
+                    keep: int = 3) -> str:
+    """Write tree to <directory>/step_<step>; returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        named = _flatten_with_names(tree)
+        manifest: Dict[str, Any] = {"step": step, "leaves": [], "shards": []}
+        shard: Dict[str, np.ndarray] = {}
+        shard_bytes = 0
+        shard_id = 0
+
+        def flush():
+            nonlocal shard, shard_bytes, shard_id
+            if shard:
+                fname = f"shard_{shard_id:04d}.npz"
+                np.savez(os.path.join(tmp, fname), **shard)
+                manifest["shards"].append(fname)
+                shard_id += 1
+                shard = {}
+                shard_bytes = 0
+
+        for name, leaf in named:
+            arr = np.asarray(leaf)
+            manifest["leaves"].append({
+                "name": name, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "shard": shard_id})
+            key = name.replace("/", "__")
+            shard[key] = arr
+            shard_bytes += arr.nbytes
+            if shard_bytes >= _SHARD_BYTES:
+                flush()
+        flush()
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Params,
+                       step: Optional[int] = None) -> Tuple[Params, int]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays: Dict[str, np.ndarray] = {}
+    for fname in manifest["shards"]:
+        with np.load(os.path.join(path, fname)) as z:
+            for k in z.files:
+                arrays[k.replace("__", "/")] = z[k]
+    named = _flatten_with_names(tree_like)
+    leaves = []
+    for name, like in named:
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = arrays[name]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: {arr.shape} vs {like.shape}")
+        leaves.append(arr)
+    tdef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(tdef, leaves), step

@@ -1,0 +1,143 @@
+"""ElasticTrainer: a training job the cluster scheduler can resize.
+
+This is the bridge between the paper's contribution (repro.core: malleable
+job scheduling) and the ML substrate: one *malleable job* = one
+ElasticTrainer.  The scheduler's expand/shrink operations call
+:meth:`resize`, which (1) optionally checkpoints, (2) rebuilds the job mesh
+at the new data-parallel width, (3) reshards the train state with a single
+device_put per leaf, and (4) resumes — reporting the measured
+reconfiguration cost back so the scheduler's speedup model
+(:class:`repro.core.speedup.TabulatedSpeedup`) stays calibrated.
+
+Fault tolerance: `step()` checkpoints every ``ckpt_every`` steps; on an
+injected node failure the trainer restores the last checkpoint at the
+surviving width (checkpoint/restart) — the paper's shrink, driven by
+hardware instead of the scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import batch_spec, param_specs
+from repro.train.data import batch_for
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+from .checkpoint import restore_checkpoint, save_checkpoint
+from .resharding import ResizePlan, make_job_mesh, reshard_tree, resize_plan
+
+
+@dataclasses.dataclass
+class ElasticStats:
+    steps: int = 0
+    resizes: int = 0
+    expands: int = 0
+    shrinks: int = 0
+    restores: int = 0
+    resize_seconds: float = 0.0
+    step_seconds: List[float] = dataclasses.field(default_factory=list)
+
+
+class ElasticTrainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, *,
+                 global_batch: int, seq_len: int, width: int,
+                 model_parallel: int = 1, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, seed: int = 0):
+        self.cfg = cfg
+        self.tc = tc
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.model_parallel = model_parallel
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.seed = seed
+        self.stats = ElasticStats()
+        self._step_fns: Dict[int, Any] = {}  # per-width jitted steps
+        self.width = width
+        self.mesh = make_job_mesh(width, model_parallel)
+        self.state = init_train_state(jax.random.PRNGKey(seed), cfg, tc)
+        self.state = reshard_tree(self.state, self.mesh)
+        self.step_num = 0
+
+    # ------------------------------------------------------------- steps
+    def _step_fn(self):
+        if self.width not in self._step_fns:
+            fn = make_train_step(self.cfg, self.tc)
+            self._step_fns[self.width] = jax.jit(fn, donate_argnums=(0,))
+        return self._step_fns[self.width]
+
+    def _device_batch(self, step: int):
+        batch = batch_for(self.cfg, self.seq_len, self.global_batch,
+                          step=step, seed=self.seed)
+        sharding = NamedSharding(self.mesh, batch_spec(self.mesh))
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), batch)
+
+    def step(self) -> Dict[str, float]:
+        t0 = time.monotonic()
+        batch = self._device_batch(self.step_num)
+        self.state, stats = self._step_fn()(self.state, batch)
+        jax.block_until_ready(stats["loss"])
+        self.step_num += 1
+        self.stats.steps += 1
+        self.stats.step_seconds.append(time.monotonic() - t0)
+        if self.ckpt_dir and self.step_num % self.ckpt_every == 0:
+            self.checkpoint()
+        return {k: float(v) for k, v in stats.items()}
+
+    # ----------------------------------------------------------- elastic
+    def checkpoint(self) -> Optional[str]:
+        if not self.ckpt_dir:
+            return None
+        host_state = jax.tree_util.tree_map(np.asarray, self.state)
+        return save_checkpoint(self.ckpt_dir, self.step_num, host_state)
+
+    def resize(self, new_width: int) -> ResizePlan:
+        """Scheduler-initiated expand/shrink to ``new_width`` hosts."""
+        if new_width == self.width:
+            return resize_plan(self.state, self.width, new_width)
+        t0 = time.monotonic()
+        plan = resize_plan(self.state, self.width, new_width)
+        self.stats.resizes += 1
+        if new_width > self.width:
+            self.stats.expands += 1
+        else:
+            self.stats.shrinks += 1
+        self.width = new_width
+        self.mesh = make_job_mesh(new_width, self.model_parallel)
+        self.state = reshard_tree(self.state, self.mesh)
+        self.stats.resize_seconds += time.monotonic() - t0
+        return plan
+
+    def try_resume(self) -> Optional[int]:
+        """Restore the latest checkpoint if one exists (restart path)."""
+        from .checkpoint import latest_step
+        if not self.ckpt_dir or latest_step(self.ckpt_dir) is None:
+            return None
+        host_like = jax.tree_util.tree_map(np.asarray, self.state)
+        restored, step = restore_checkpoint(self.ckpt_dir, host_like)
+        self.state = reshard_tree(restored, self.mesh)
+        self.step_num = step
+        return step
+
+    def fail_and_restore(self, surviving_width: int) -> int:
+        """Node failure: restart from the last checkpoint on fewer hosts.
+
+        Returns the number of steps lost (recomputed)."""
+        if not self.ckpt_dir:
+            raise RuntimeError("failure recovery requires a ckpt_dir")
+        self.stats.restores += 1
+        self.width = surviving_width
+        self.mesh = make_job_mesh(surviving_width, self.model_parallel)
+        host_like = jax.tree_util.tree_map(np.asarray, self.state)
+        restored, step = restore_checkpoint(self.ckpt_dir, host_like)
+        lost = self.step_num - step
+        self.state = reshard_tree(restored, self.mesh)
+        self.step_num = step
+        return lost

@@ -1,0 +1,70 @@
+"""Resharding a train state onto a new mesh (the malleable-ML bridge).
+
+When the cluster scheduler (repro.core) expands or shrinks a training job,
+its data-parallel width changes: the job rebuilds its mesh and every array
+must land in the new sharding.  ``reshard_tree`` does that with a single
+``jax.device_put`` per leaf — JAX inserts the minimal resharding collectives
+(or host transfers on CPU).  ``resize_plan`` computes the paper-relevant
+cost model: bytes moved and the estimated reconfiguration time that
+``repro.core.speedup`` feeds back into scheduling decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.sharding import param_specs
+
+Params = Any
+
+
+def make_job_mesh(n_hosts: int, model_parallel: int = 1,
+                  devices=None) -> Mesh:
+    """Mesh for one elastic job: (data = n_hosts, model = model_parallel)."""
+    devices = devices if devices is not None else jax.devices()
+    need = n_hosts * model_parallel
+    if need > len(devices):
+        raise ValueError(f"job needs {need} devices, have {len(devices)}")
+    dev = np.asarray(devices[:need]).reshape(n_hosts, model_parallel)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard_tree(tree: Params, new_mesh: Mesh, *, fsdp: bool = False
+                 ) -> Params:
+    """Move every leaf to its sharding under ``new_mesh``."""
+    specs = param_specs(tree, new_mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        tree, specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizePlan:
+    old_dp: int
+    new_dp: int
+    param_bytes: int
+    bytes_moved: int          # upper bound: full regather on width change
+    est_seconds: float        # at the link bandwidth assumed below
+
+    LINK_GBPS: float = 50.0   # ICI per-link (TPU v5e), see §Roofline
+
+
+def resize_plan(tree: Params, old_dp: int, new_dp: int) -> ResizePlan:
+    """Cost model for a dp-width change (checkpoint-free resharding).
+
+    With parameter shardings independent of dp (pure DP replication) only
+    optimizer moments sharded over dp move; with FSDP everything regathers.
+    We report the conservative full-regather bound — the number the paper's
+    tick-induced idle time stands in for (§2.3: 2-4 s to add/remove 8
+    nodes), now derived from first principles instead of assumed.
+    """
+    nbytes = sum(np.prod(x.shape) * x.dtype.itemsize
+                 for x in jax.tree_util.tree_leaves(tree))
+    moved = int(nbytes)
+    est = moved / (ResizePlan.LINK_GBPS * 1e9)
+    return ResizePlan(old_dp=old_dp, new_dp=new_dp, param_bytes=int(nbytes),
+                      bytes_moved=moved, est_seconds=float(est))

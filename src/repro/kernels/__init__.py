@@ -1,0 +1,22 @@
+# Pallas TPU kernels for the system's compute hot spots, with pure-jnp
+# oracles (ref.py) and backend dispatch (ops.py).
+#
+#   flash_attention — blockwise online-softmax attention (causal / sliding
+#                     window / GQA via index-map KV sharing)
+#   ssd_scan        — Mamba-2 state-space-duality chunked scan
+#   rmsnorm         — fused RMS normalization
+#   waterfill       — the scheduler's greedy shrink/expand prefix waterfill
+#                     (the paper's per-tick redistribution hot loop)
+#
+# All kernels validate against ref.py with interpret=True on CPU.
+from . import ops, ref
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+from .ssd_scan import ssd_scan
+from .waterfill import (greedy_expand_pallas, greedy_shrink_pallas,
+                        waterfill)
+
+__all__ = [
+    "ops", "ref", "flash_attention", "rmsnorm", "ssd_scan",
+    "waterfill", "greedy_shrink_pallas", "greedy_expand_pallas",
+]

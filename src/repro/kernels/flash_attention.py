@@ -1,0 +1,179 @@
+"""Blockwise flash attention as a Pallas TPU kernel.
+
+Layout and tiling (TPU-native, not a CUDA port):
+
+  * grid = (batch, q_heads, n_q_blocks, n_kv_blocks) — the KV dimension is
+    innermost, so on TPU the sequential grid walks KV blocks while the
+    online-softmax running state (acc, m, l) lives in VMEM scratch.
+  * BlockSpecs stage (block_q x head_dim) query tiles and
+    (block_k x head_dim) key/value tiles HBM->VMEM; both block sizes default
+    to 128 to match the MXU systolic tile and the (8,128) VREG lanes.
+  * GQA is expressed in the *index map*: the KV BlockSpec maps query head
+    ``h`` to KV head ``h // (H / H_kv)`` — KV tiles are fetched once per
+    group, never materialized repeated.
+  * causal / sliding-window / valid-length masking is positional; fully
+    masked KV blocks are *skipped* (``pl.when`` guards the matmuls), which
+    on real hardware elides the dominant cost of the causal lower triangle.
+
+Scalars (q_offset, kv_valid_len, window) arrive via scalar prefetch so the
+same compiled kernel serves prefill (offset 0) and decode (offset = cache
+length, single query row) without recompilation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(scalars, q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, *,
+                 block_q: int, block_k: int, n_kv_blocks: int,
+                 causal: bool, softmax_scale: float, out_dtype):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    q_offset = scalars[0]
+    kv_valid = scalars[1]
+    window = scalars[2]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = q_offset + iq * block_q                 # first absolute q position
+    q_hi = q_lo + block_q - 1                      # last absolute q position
+    k_lo = ik * block_k
+
+    # Block-level skip: entirely below the causal diagonal / past valid KV /
+    # left of every query's sliding window.
+    live = k_lo < kv_valid
+    if causal:
+        live &= k_lo <= q_hi
+    live &= jax.lax.select(window > 0,
+                           k_lo + block_k - 1 > q_lo - window,
+                           True)
+
+    @pl.when(live)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32) * softmax_scale   # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kv_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < kv_valid
+        if causal:
+            mask &= kv_pos <= q_pos
+        mask &= jax.lax.select(window > 0,
+                               kv_pos > q_pos - window,
+                               jnp.ones_like(mask))
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                                  # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_blk = jnp.max(s, axis=-1, keepdims=True)             # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)          # (bq, bk)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)        # (bq, 1)
+        l_ref[...] = jnp.broadcast_to(
+            l_prev * corr + jnp.sum(p, axis=-1, keepdims=True),
+            l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (bk, dh)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, :, :] = jnp.where(
+            l > 0.0, acc_ref[...] / safe, 0.0).astype(out_dtype)
+
+
+def flash_attention(
+    q: jax.Array,                   # (B, Sq, H, Dh)
+    k: jax.Array,                   # (B, Sk, Hkv, Dh)
+    v: jax.Array,                   # (B, Sk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int = 0,                # 0 => global
+    q_offset: int = 0,              # decode: cache length
+    kv_valid_len: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, Sq, H, Dh) in q.dtype.  See module docstring."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    groups = h // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+
+    # kernel layout: heads outside sequence
+    qt = q.transpose(0, 2, 1, 3)                  # (B, H, Sq, Dh)
+    kt = k.transpose(0, 2, 1, 3)                  # (B, Hkv, Sk, Dh)
+    vt = v.transpose(0, 2, 1, 3)
+
+    block_q = min(block_q, max(sq, 1))
+    block_k = min(block_k, max(sk, 1))
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = qt.shape[2] // block_q
+    nk = kt.shape[2] // block_k
+
+    valid = sk if kv_valid_len is None else kv_valid_len
+    scalars = jnp.asarray(
+        [jnp.asarray(q_offset, jnp.int32),
+         jnp.asarray(valid, jnp.int32),
+         jnp.asarray(window, jnp.int32)], dtype=jnp.int32)
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, n_kv_blocks=nk,
+        causal=causal, softmax_scale=scale, out_dtype=q.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b_, h_, iq, ik, s: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h_, iq, ik, s: (b_, h_ // groups, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h_, iq, ik, s: (b_, h_ // groups, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b_, h_, iq, ik, s: (b_, h_, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        interpret=interpret,
+    )(scalars, qt, kt, vt)
+    return out[:, :, :sq].transpose(0, 2, 1, 3)

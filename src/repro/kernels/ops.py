@@ -1,0 +1,94 @@
+"""Dispatch wrappers: Pallas kernels on TPU, XLA paths elsewhere.
+
+Call sites (models, scheduler) go through these functions.  Dispatch order:
+
+  1. ``REPRO_KERNELS=interpret`` — Pallas in interpret mode (CPU test rigs;
+     executes the kernel body in Python, numerically identical to TPU).
+  2. ``REPRO_KERNELS=off`` — always the XLA fallback.
+  3. default — Pallas iff the backend is TPU, else XLA fallback.
+
+The XLA fallbacks are NOT the naive oracles (those live in :mod:`ref`):
+attention falls back to the blockwise online-softmax scan in
+:mod:`repro.models.layers` and SSD to the chunked einsum formulation in
+:mod:`repro.models.ssm` — memory-safe paths the dry-run also lowers, so the
+roofline reads the algorithm the TPU would run, expressed in XLA ops.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+from . import waterfill as _wf
+from . import ref as _ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env in ("interpret", "off", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "off"
+
+
+def use_pallas() -> bool:
+    return _mode() in ("pallas", "interpret")
+
+
+def _interp() -> bool:
+    return _mode() == "interpret"
+
+
+# ----------------------------------------------------------------- attention
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset=0, kv_valid_len=None,
+              softmax_scale: Optional[float] = None,
+              block_q: int = 128, block_k: int = 128):
+    """Flash attention.  q: (B,Sq,H,Dh); k/v: (B,Sk,Hkv,Dh)."""
+    if use_pallas():
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, softmax_scale=softmax_scale,
+            block_q=block_q, block_k=block_k, interpret=_interp()
+        ).astype(jnp.float32)
+    from repro.models import layers as L
+    sq = q.shape[1]
+    qpos = jnp.asarray(q_offset) + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    return L.chunked_attention(
+        q, k, v, q_positions=qpos, kv_positions=kpos, causal=causal,
+        window=jnp.asarray(window) if window else None,
+        kv_valid_len=(jnp.asarray(kv_valid_len)
+                      if kv_valid_len is not None else None),
+        softmax_scale=softmax_scale, block_k=block_k)
+
+
+# ----------------------------------------------------------------- SSD
+def ssd(x, dt, a, b, c, *, chunk: int = 128, initial_state=None):
+    """Mamba-2 SSD scan.  Returns (y, final_state)."""
+    if use_pallas():
+        return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                             initial_state=initial_state,
+                             interpret=_interp())
+    from repro.models import ssm as S
+    return S.ssd_chunked(x, dt, a, b, c, chunk=chunk,
+                         initial_state=initial_state)
+
+
+# ----------------------------------------------------------------- rmsnorm
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    if use_pallas():
+        return _rn.rmsnorm(x, scale, eps=eps, interpret=_interp())
+    return _ref.rmsnorm(x, scale, eps)
+
+
+# ----------------------------------------------------------------- waterfill
+def waterfill(capacity, target):
+    """Priority-ordered greedy take (scheduler Steps 2-3 inner loop)."""
+    if use_pallas():
+        return _wf.waterfill(capacity, target, interpret=_interp())
+    return _ref.waterfill(capacity, target)

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately *naive* implementations (full score matrices,
+sequential recurrences) — independent of both the Pallas kernels and the
+blockwise XLA paths in :mod:`repro.models.layers` / :mod:`repro.models.ssm`,
+so a three-way agreement (oracle == XLA path == Pallas kernel) pins down
+which layer is wrong when a test fails.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------- attention
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset: int = 0, kv_valid_len: Optional[int] = None,
+              softmax_scale: Optional[float] = None):
+    """Full-matrix masked softmax attention.
+
+    q: (B, Sq, H, Dh); k/v: (B, Sk, Hkv, Dh).  GQA via logical KV repeat.
+    ``window > 0`` keeps kv positions in (q_pos - window, q_pos].
+    ``q_offset`` shifts query absolute positions (decode: cache length).
+    Returns (B, Sq, H, Dh) float32.
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, dv = v.shape
+    groups = h // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+
+    kr = jnp.repeat(k, groups, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, groups, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kr)
+
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if kv_valid_len is not None:
+        mask &= (kv_pos < kv_valid_len)[None, :]
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    return out
+
+
+# ----------------------------------------------------------------- SSD scan
+def ssd(x, dt, a, b, c, initial_state=None):
+    """Sequential (step-by-step) SSD recurrence — the slow exact oracle.
+
+    x: (B,S,H,P); dt: (B,S,H) post-softplus; a: (H,) positive;
+    b, c: (B,S,N).  Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32).
+
+      state_t = exp(-a dt_t) state_{t-1} + dt_t x_t b_t^T
+      y_t     = state_t c_t
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    state = (initial_state if initial_state is not None
+             else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def step(state, xs):
+        x_t, dt_t, b_t, c_t = xs          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(-a[None, :] * dt_t)                 # (B,H)
+        upd = (dt_t[..., None, None] * x_t[..., None]
+               * b_t[:, None, None, :])                     # (B,H,P,N)
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+# ----------------------------------------------------------------- rmsnorm
+def rmsnorm(x, scale, eps: float = 1e-6):
+    """(..., d) RMS normalization with learned scale, f32 accumulation."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+
+
+# ----------------------------------------------------------------- waterfill
+def waterfill(capacity, target):
+    """Greedy prefix waterfill: take from each slot in order until target.
+
+    capacity: (N,) >= 0 in the desired (priority) order; target: scalar.
+    Returns per-slot take with sum == min(target, capacity.sum()).
+    This is the inner loop of greedy_shrink / greedy_expand (paper §2.1
+    Steps 2-3) after priority sorting.
+    """
+    capacity = jnp.asarray(capacity)
+    cum = jnp.cumsum(capacity)
+    total = cum[-1] if capacity.shape[0] else jnp.zeros((), capacity.dtype)
+    tgt = jnp.minimum(jnp.asarray(target, dtype=cum.dtype), total)
+    prev = cum - capacity
+    return jnp.clip(tgt - prev, 0, capacity)

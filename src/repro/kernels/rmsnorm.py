@@ -1,0 +1,50 @@
+"""Fused RMSNorm as a Pallas TPU kernel.
+
+One pass over each (block_rows x d) tile: mean-square reduction, rsqrt and
+scale all happen in VMEM — XLA's unfused chain (square, reduce, rsqrt,
+mul, mul) re-reads the activation from HBM; the fused kernel reads it once.
+Rows are tiled so arbitrary (B*S, d) activations stream through a fixed
+VMEM footprint; d stays whole per tile (the reduction axis must be
+resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, out_dtype):
+    x = x_ref[...].astype(jnp.float32)            # (br, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(out_dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """Fused RMSNorm over the last axis.  x: (..., d); scale: (d,)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    rows = x2.shape[0]
+    block_rows = min(block_rows, max(rows, 1))
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // block_rows,)
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, out_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=interpret,
+    )(x2, scale.reshape(1, d))
+    return out[:rows].reshape(orig_shape)

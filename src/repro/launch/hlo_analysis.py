@@ -1,0 +1,241 @@
+"""Roofline terms from compiled HLO (the dry-run's analysis side).
+
+This container is CPU-only; TPU v5e is the compile TARGET.  The three
+roofline terms are derived from the compiled artifact:
+
+  compute    = HLO_FLOPs / (chips x peak)          [cost_analysis]
+  memory     = HLO_bytes / (chips x HBM bw)        [cost_analysis]
+  collective = collective_bytes / (chips x link bw)  [HLO text parse]
+
+``collective_bytes`` is not in cost_analysis: we parse the post-SPMD HLO
+and sum, for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, the bytes each participating device moves over ICI
+using the standard ring-algorithm cost model:
+
+  all-gather      (n-1)/n x result_bytes      (per device)
+  reduce-scatter  (n-1)/n x operand_bytes
+  all-reduce      2 (n-1)/n x operand_bytes   (RS + AG)
+  all-to-all      (n-1)/n x operand_bytes
+  collective-permute  operand_bytes
+
+where n = replica-group size parsed per op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~3 links usable per axis)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.:  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*(?:\([^)]*\))?[^)]*)\)(.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum bytes over every dtype[dims] occurrence in ``text``."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(tail: str) -> Optional[int]:
+    m = _GROUPS_IOTA_RE.search(tail)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_RE.search(tail)
+    if m and m.group(1).strip():
+        first = m.group(1).split("}")[0].strip().lstrip("{")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device ICI bytes by collective type + op counts."""
+    bytes_by_type: Dict[str, float]
+    count_by_type: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_type.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Scan (post-SPMD) HLO text and cost every collective op.
+
+    Sizing uses the op's *result* shape (operands print without shapes in
+    this HLO dialect).  Post-SPMD shapes are per-device, so the per-type
+    formulas below give per-device ICI bytes directly:
+
+      all-gather      result = gathered tensor -> (n-1)/n x result
+      all-reduce      result = operand         -> 2 (n-1)/n x result
+      reduce-scatter  result = operand / n     -> (n-1) x result
+      all-to-all      result size = operand    -> (n-1)/n x result
+      collective-permute                       -> result
+
+    Async ``-start`` tuples carry (operand, result[, scratch]); the largest
+    element is the one the formulas above want in every case.
+    """
+    bytes_by: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    count_by: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_s, op, started, _operands_s, tail = m.groups()
+        # (`-done` ops never match: the op token is e.g. "all-reduce-done(")
+        n = _group_size(tail) or n_devices
+        if n <= 1:
+            continue
+        if result_s.startswith("("):
+            sizes = [_shape_bytes(s) for s in result_s.strip("()").split(",")]
+            result_b = max(sizes) if sizes else 0.0
+        else:
+            result_b = _shape_bytes(result_s)
+        frac = (n - 1) / n
+        if op == "all-gather":
+            moved = frac * result_b
+        elif op == "reduce-scatter":
+            moved = (n - 1) * result_b
+        elif op == "all-reduce":
+            moved = 2.0 * frac * result_b
+        elif op == "all-to-all":
+            moved = frac * result_b
+        else:  # collective-permute
+            moved = result_b
+        bytes_by[op] += moved
+        count_by[op] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled cell (seconds, per step).
+
+    All ``hlo_*``/``collective_*`` inputs are PER-DEVICE: XLA's
+    cost_analysis and the post-SPMD HLO both describe the single-partition
+    module.  The spec formula `global / (chips x rate)` is identical since
+    global = per-device x chips.  ``model_flops`` is global (6 N D).
+    """
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per-device FLOPs
+    hlo_bytes: float            # per-device HBM bytes accessed
+    collective_bytes: float     # per-device ICI bytes
+    collective_detail: Dict[str, float]
+    collective_counts: Dict[str, int]
+    model_flops: float          # global: 6 N D (dense) / 6 N_active D (MoE)
+    peak_mem_per_device: float  # from memory_analysis
+    compile_seconds: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """max-term / sum-of-terms: 1.0 = perfectly bound by one resource
+        (nothing wasted waiting on the others, assuming full overlap)."""
+        s = self.t_compute + self.t_memory + self.t_collective
+        return self.t_bound / s if s else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """MODEL_FLOPS-based MFU if the step ran exactly at t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return self.model_flops / (self.t_bound * self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 mfu_upper_bound=self.mfu_upper_bound,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops_per_step(cfg, shape, n_active_params: int) -> float:
+    """6 N D for training; 2 N D for inference forward passes.
+
+    D = processed tokens per step: batch x seq for train/prefill,
+    batch x 1 for decode.
+    """
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * tokens
+    return 2.0 * n_active_params * shape.global_batch
+
+
+def active_param_count(cfg, params_tree) -> int:
+    """Parameter count with MoE experts scaled to the active top-k set."""
+    import jax
+    import numpy as np
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        n = int(np.prod(leaf.shape))
+        keys = [str(e.key) for e in path
+                if isinstance(e, jax.tree_util.DictKey)]
+        if "moe" in keys and path[-1].key in ("w1", "w2", "w3"):
+            # routed experts: scale by activated fraction
+            n = int(n * (cfg.top_k + cfg.n_shared_experts)
+                    / max(cfg.n_experts + cfg.n_shared_experts, 1))
+        total += n
+    return total

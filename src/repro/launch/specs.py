@@ -1,0 +1,226 @@
+"""Abstract input/state specs for every (arch x shape) dry-run cell.
+
+Everything here is ``jax.ShapeDtypeStruct`` / ``jax.eval_shape`` — no device
+allocation ever happens; the FULL configs (236B params, 0.5M-token caches)
+are only ever *described*, then lowered and compiled against the production
+mesh.
+
+``input_specs(cfg, shape)`` returns the step inputs:
+  * train    — batch {tokens, labels [, patches | frames]}
+  * prefill  — batch {tokens [, patches | frames]}
+  * decode   — (token, cache, cache_len): one new token against a
+               ``shape.seq_len``-entry cache (the assignment's decode
+               semantics).
+
+``sharding_plan`` pairs those specs with NamedShardings on a given mesh
+under a :class:`repro.launch.mesh.ParallelPolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as D
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.train.train_step import TrainConfig, init_train_state
+
+from .mesh import ParallelPolicy, dp_axes, dp_size
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _frontend_entries(cfg: ModelConfig, batch: int,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    if cfg.frontend == "vision":
+        return {"patches": _sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                dtype)}
+    if cfg.frontend == "audio":
+        return {"frames": _sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                               dtype)}
+    return {}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every step input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32),
+                 **_frontend_entries(cfg, b, compute_dtype)}
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 **_frontend_entries(cfg, b, compute_dtype)}
+        return {"batch": batch}
+    if shape.kind == "decode":
+        enc_len = cfg.n_frontend_tokens if cfg.is_encdec else None
+        cache = jax.eval_shape(
+            lambda: D.init_decode_cache(cfg, b, s, compute_dtype,
+                                        enc_len=enc_len))
+        return {"token": _sds((b, 1), jnp.int32),
+                "cache": cache,
+                "cache_len": _sds((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def state_specs(cfg: ModelConfig, tc: TrainConfig) -> Any:
+    """Abstract train state (params + opt [+ ef]) via eval_shape."""
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tc), jax.random.key(0))
+
+
+# ------------------------------------------------------------------ sharding
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    """Batch arrays: leading dim over the dp axes (replicate if indivisible)."""
+    dp = dp_axes(mesh)
+    total = dp_size(mesh)
+    entry = dp if len(dp) > 1 else dp[0]
+
+    def leaf(x):
+        if x.shape and x.shape[0] % total == 0 and x.shape[0] >= total:
+            return P(entry)
+        return P()
+    return _named(mesh, jax.tree_util.tree_map(leaf, batch_specs))
+
+
+def cache_shardings(cache_specs_tree, mesh: Mesh, *, seq_shard: bool = False):
+    """Decode caches: batch over dp; heads over model; optionally the cache
+    sequence dim over ``data`` when batch is too small to split
+    (long_500k's B=1 half-meg cache)."""
+    specs = SH.cache_specs(cache_specs_tree, mesh)
+    if seq_shard:
+        data = mesh.shape.get("data", 1)
+
+        def widen(path, x, sp):
+            shape = x.shape
+            lst = list(sp) + [None] * (len(shape) - len(sp))
+            # stacked caches: (L, B, S, ...) — S at dim 2; shared: dim 1
+            bdim = 1 if len(shape) >= 4 else 0
+            sdim = bdim + 1
+            if (lst[bdim] is None and sdim < len(shape) - 1
+                    and lst[sdim] is None and shape[sdim] % data == 0
+                    and shape[sdim] >= data):
+                lst[sdim] = "data"
+            return P(*lst)
+
+        specs = jax.tree_util.tree_map_with_path(
+            widen, cache_specs_tree, specs)
+    return _named(mesh, specs)
+
+
+def train_state_shardings(state, mesh: Mesh, policy: ParallelPolicy):
+    """params: TP (+FSDP if policy); mu/nu: TP (+dp if zero1); scalars rep."""
+    dp = dp_axes(mesh)
+    p_specs = SH.param_specs(state["params"], mesh, fsdp=policy.fsdp,
+                             dp_axes=dp)
+    m_specs = SH.param_specs(state["params"], mesh,
+                             fsdp=policy.fsdp or policy.zero1, dp_axes=dp)
+    out = {"params": p_specs, "opt": {"mu": m_specs, "nu": m_specs,
+                                      "step": P()}}
+    if "master" in state.get("opt", {}):
+        out["opt"]["master"] = m_specs
+    if "ef" in state:
+        out["ef"] = p_specs
+    return _named(mesh, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    kind: str                 # train | prefill | decode
+    fn: Any                   # the jittable step function
+    args: Tuple[Any, ...]     # abstract inputs, in order
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               policy: ParallelPolicy,
+               tc: Optional[TrainConfig] = None) -> CellPlan:
+    """Assemble step fn + abstract args + shardings for one cell."""
+    import os
+    from repro.train.train_step import make_train_step
+    # activation pinning (models.layers.mesh_constrain) is an FSDP
+    # countermeasure; pure-TP archs compile best unpinned (§Perf A3/G2)
+    os.environ["REPRO_ACT_PIN"] = "1" if policy.fsdp else "0"
+
+    compute = jnp.bfloat16
+    ins = input_specs(cfg, shape, compute)
+
+    if shape.kind == "train":
+        tc = tc or TrainConfig(
+            remat=policy.remat, accum_steps=policy.accum_steps,
+            param_dtype=jnp.dtype(policy.param_dtype))
+        state = state_specs(cfg, tc)
+        state_sh = train_state_shardings(state, mesh, policy)
+        batch_sh = batch_shardings(ins["batch"], mesh)
+        step = make_train_step(cfg, tc)
+        stats_sh = NamedSharding(mesh, P())
+        return CellPlan(
+            kind="train", fn=step, args=(state, ins["batch"]),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, jax.tree_util.tree_map(
+                lambda _: stats_sh,
+                jax.eval_shape(lambda: {
+                    "loss": jnp.zeros(()), "lr": jnp.zeros(()),
+                    "grad_norm": jnp.zeros(()), "ce_loss": jnp.zeros(()),
+                    "aux_loss": jnp.zeros(())}))))
+
+    params = jax.eval_shape(
+        lambda k: T.init_params(k, cfg, param_dtype=compute),
+        jax.random.key(0))
+    # big archs (policy.fsdp) shard weights over dp too, or serving params
+    # alone would blow HBM (deepseek-v2 bf16 = 472 GB / 16 TP = 29.5 GB).
+    param_sh = _named(mesh, SH.param_specs(params, mesh, fsdp=policy.fsdp,
+                                           dp_axes=dp_axes(mesh)))
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "prefill":
+        batch_sh = batch_shardings(ins["batch"], mesh)
+        cache_abs = jax.eval_shape(
+            lambda p, b: D.prefill(p, cfg, b, cache_size=shape.seq_len,
+                                   dtype=compute)[1], params, ins["batch"])
+        cache_sh = cache_shardings(cache_abs, mesh)
+
+        def prefill_fn(p, b):
+            return D.prefill(p, cfg, b, cache_size=shape.seq_len,
+                             dtype=compute)
+
+        return CellPlan(
+            kind="prefill", fn=prefill_fn, args=(params, ins["batch"]),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(batch_shardings(
+                _sds((shape.global_batch, cfg.vocab), jnp.float32), mesh),
+                cache_sh))
+
+    # decode
+    seq_shard = shape.global_batch < dp_size(mesh)
+    cache_sh = cache_shardings(ins["cache"], mesh, seq_shard=seq_shard)
+    tok_sh = batch_shardings(ins["token"], mesh)
+
+    def serve_step(p, tok, cache, cache_len):
+        return D.decode_step(p, cfg, tok, cache, cache_len, dtype=compute)
+
+    return CellPlan(
+        kind="decode", fn=serve_step,
+        args=(params, ins["token"], ins["cache"], ins["cache_len"]),
+        in_shardings=(param_sh, tok_sh, cache_sh, rep),
+        out_shardings=(batch_shardings(
+            _sds((shape.global_batch, cfg.vocab), jnp.float32), mesh),
+            cache_sh))

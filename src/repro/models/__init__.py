@@ -1,0 +1,4 @@
+# Substrate: the 10 assigned architectures as pure-JAX functional models.
+# Params are nested dicts of jnp arrays; repeated layers are stacked along a
+# leading axis and executed with lax.scan (O(1) compile time in depth).
+from . import decode, layers, moe, ssm, transformer  # noqa: F401

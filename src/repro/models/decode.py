@@ -1,0 +1,281 @@
+"""Prefill / decode execution modes with per-family caches.
+
+Cache anatomy (one entry per plan segment, arrays stacked over the segment's
+layers):
+
+  * GQA segments     — {"k", "v"}: (L, B, S_cache, H_kv, D_h)
+  * MLA segments     — {"ckv": (L, B, S, kv_lora), "krope": (L, B, S, qk_rope)}
+                       (the *compressed latent* — MLA's raison d'être)
+  * Mamba segments   — stacked :class:`repro.models.ssm.MambaCache`
+                       (O(1) in sequence length)
+  * shared blocks    — one {"k", "v"} per marker application (zamba2)
+  * whisper decoder  — {"k", "v"} self-attn + {"ck", "cv"} precomputed
+                       cross-attention keys/values over encoder states
+
+``prefill`` runs the full sequence once and emits the cache;
+``decode_step`` advances one token.  Both scan over layers exactly like
+training, so compile time stays O(#segments).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from .transformer import (Segment, _self_attention, _ssm_dims, build_plan,
+                          layer_thetas, layer_windows, logits_fn,
+                          run_encoder, scan_unroll)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _dec_plan(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return (Segment("dec", cfg.n_layers, 0),)
+    return build_plan(cfg)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_size: int,
+                      dtype=jnp.bfloat16, enc_len: Optional[int] = None
+                      ) -> Cache:
+    """Zero-initialized cache pytree (also usable as ShapeDtypeStruct spec)."""
+    segs = []
+    dims = _ssm_dims(cfg) if cfg.ssm_state else None
+    for seg in _dec_plan(cfg):
+        if seg.kind == "mamba":
+            segs.append(S.MambaCache(
+                conv_x=jnp.zeros((seg.count, batch, dims.d_conv - 1,
+                                  dims.d_inner), dtype),
+                conv_bc=jnp.zeros((seg.count, batch, dims.d_conv - 1,
+                                   2 * dims.dstate), dtype),
+                state=jnp.zeros((seg.count, batch, dims.nheads, dims.headdim,
+                                 dims.dstate), jnp.float32)))
+        elif seg.kind == "shared":
+            segs.append({
+                "k": jnp.zeros((batch, cache_size, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cache_size, cfg.n_kv_heads,
+                                cfg.head_dim), dtype)})
+        elif cfg.attn == "mla":
+            segs.append({
+                "ckv": jnp.zeros((seg.count, batch, cache_size, cfg.kv_lora),
+                                 dtype),
+                "krope": jnp.zeros((seg.count, batch, cache_size,
+                                    cfg.qk_rope), dtype)})
+        else:
+            c = {"k": jnp.zeros((seg.count, batch, cache_size,
+                                 cfg.n_kv_heads, cfg.head_dim), dtype),
+                 "v": jnp.zeros((seg.count, batch, cache_size,
+                                 cfg.n_kv_heads, cfg.head_dim), dtype)}
+            if seg.kind == "dec":
+                c["ck"] = jnp.zeros((seg.count, batch, enc_len or 1,
+                                     cfg.n_heads, cfg.head_dim), dtype)
+                c["cv"] = jnp.zeros((seg.count, batch, enc_len or 1,
+                                     cfg.n_heads, cfg.head_dim), dtype)
+            segs.append(c)
+    return {"segments": segs}
+
+
+# ------------------------------------------------------------------ decode
+def _cross_cached(p, x, ck, cv, cfg, dtype):
+    b, sq, _ = x.shape
+    q = (x.astype(dtype) @ p["wq"].astype(dtype)).reshape(
+        b, sq, cfg.n_heads, cfg.head_dim)
+    out = L.chunked_attention(q, ck.astype(dtype), cv.astype(dtype),
+                              q_positions=jnp.zeros((sq,), jnp.int32),
+                              kv_positions=jnp.arange(ck.shape[1]),
+                              causal=False, window=None)
+    out = out.reshape(b, sq, cfg.n_heads * cfg.head_dim)
+    return out.astype(dtype) @ p["wo"].astype(dtype)
+
+
+def apply_block_decode(p, x, kind: str, cfg: ModelConfig, cache,
+                       cache_len, window, theta, dtype):
+    """One-token block step.  Returns (x, new_cache_leaf)."""
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        out, new_c = S.mamba2_decode(p["mixer"], h, cache, _ssm_dims(cfg),
+                                     dtype)
+        return x + out, new_c
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.attn == "mla" and kind in ("attn", "moe"):
+        att, ckv, krope = L.mla_decode(
+            p["attn"], h, cache["ckv"], cache["krope"], cache_len,
+            n_heads=cfg.n_heads, kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope,
+            qk_rope=cfg.qk_rope, v_head=cfg.v_head, rope_theta=theta,
+            dtype=dtype)
+        new_cache: Cache = {"ckv": ckv, "krope": krope}
+    else:
+        theta_arg = None if cfg.rope_theta == 0 else theta
+        att, k, v = L.gqa_decode(
+            p["attn"], h, cache["k"], cache["v"], cache_len,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=theta_arg, window=window, dtype=dtype)
+        new_cache = {"k": k, "v": v}
+    x = x + att
+    if kind == "dec":
+        hx = L.apply_norm(cfg.norm, p["lnx"], x)
+        x = x + _cross_cached(p["cross"], hx, cache["ck"], cache["cv"], cfg,
+                              dtype)
+        new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+    h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+    if kind == "moe":
+        out, _ = M.apply_moe(p["moe"], h2, n_experts=cfg.n_experts,
+                             top_k=cfg.top_k, act=cfg.act, dtype=dtype,
+                             capacity_factor=cfg.moe_capacity_factor)
+        x = x + out
+    else:
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.act, dtype)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Cache,
+                cache_len: jax.Array, *, dtype=jnp.bfloat16
+                ) -> Tuple[jax.Array, Cache]:
+    """One decoding step.  token: (B, 1) int32; returns (logits, cache)."""
+    x = L.embed(params["embed"], token, dtype)
+    if cfg.rope_theta == 0 or cfg.is_encdec:
+        x = x + L.sinusoidal_at(jnp.asarray(cache_len), cfg.d_model
+                                ).astype(dtype)[None, None, :]
+    windows = jnp.asarray(layer_windows(cfg))
+    thetas = jnp.asarray(layer_thetas(cfg))
+    new_segments = []
+    for seg, seg_p, seg_c in zip(_dec_plan(cfg), params["segments"],
+                                 cache["segments"]):
+        if seg.kind == "shared":
+            x, new_c = apply_block_decode(
+                params["shared_block"], x, "shared", cfg, seg_c, cache_len,
+                jnp.int32(0), jnp.float32(cfg.rope_theta), dtype)
+            new_segments.append(new_c)
+            continue
+        w_seg = windows[seg.start:seg.start + seg.count]
+        t_seg = thetas[seg.start:seg.start + seg.count]
+
+        def body(carry, xs, kind=seg.kind):
+            xc = carry
+            p_l, c_l, w_l, t_l = xs
+            xc, new_c = apply_block_decode(p_l, xc, kind, cfg, c_l,
+                                           cache_len, w_l, t_l, dtype)
+            return xc, new_c
+
+        x, new_c = jax.lax.scan(body, x, (seg_p, seg_c, w_seg, t_seg),
+                                unroll=seg.count if scan_unroll() else 1)
+        new_segments.append(new_c)
+    logits = logits_fn(params, cfg, x, dtype)
+    return logits[:, 0], {"segments": new_segments}
+
+
+# ------------------------------------------------------------------ prefill
+def _pad_cache_seq(arr, cache_size):
+    pad = cache_size - arr.shape[1]
+    if pad <= 0:
+        return arr[:, :cache_size]
+    cfgpad = [(0, 0)] * arr.ndim
+    cfgpad[1] = (0, pad)
+    return jnp.pad(arr, cfgpad)
+
+
+def apply_block_prefill(p, x, kind: str, cfg: ModelConfig, positions, window,
+                        theta, dtype, cache_size, enc=None):
+    """Full-sequence block that also emits its decode-cache leaf."""
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        out, mc = S.apply_mamba2(p["mixer"], h, _ssm_dims(cfg), dtype,
+                                 return_cache=True)
+        return x + out, mc
+    b, s, _ = x.shape
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.attn == "mla" and kind in ("attn", "moe"):
+        c_kv, k_rope = L.mla_latent(p["attn"], h, positions, theta, dtype,
+                                    kv_lora=cfg.kv_lora, qk_rope=cfg.qk_rope)
+        att = L.mla_attention_from_latent(
+            p["attn"], h, c_kv, k_rope, n_heads=cfg.n_heads,
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head,
+            q_positions=positions, kv_positions=positions, rope_theta=theta,
+            causal=True, dtype=dtype)
+        leaf: Cache = {"ckv": _pad_cache_seq(c_kv, cache_size),
+                       "krope": _pad_cache_seq(k_rope[:, :, 0, :],
+                                               cache_size)}
+    else:
+        theta_arg = None if cfg.rope_theta == 0 else theta
+        q, k, v = L.gqa_project_qkv(p["attn"], h, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, positions,
+                                    theta_arg, dtype)
+        att = L.chunked_attention(q, k, v, q_positions=positions,
+                                  kv_positions=positions, causal=True,
+                                  window=window)
+        att = att.reshape(b, s, cfg.n_heads * cfg.head_dim)
+        att = att.astype(dtype) @ p["attn"]["wo"].astype(dtype)
+        leaf = {"k": _pad_cache_seq(k, cache_size),
+                "v": _pad_cache_seq(v, cache_size)}
+    x = x + att
+    if kind == "dec":
+        hx = L.apply_norm(cfg.norm, p["lnx"], x)
+        x = x + L.cross_attention(p["cross"], hx, enc, n_heads=cfg.n_heads,
+                                  head_dim=cfg.head_dim, dtype=dtype)
+        se = enc.shape[1]
+        leaf["ck"] = (enc.astype(dtype) @ p["cross"]["wk"].astype(dtype)
+                      ).reshape(b, se, cfg.n_heads, cfg.head_dim)
+        leaf["cv"] = (enc.astype(dtype) @ p["cross"]["wv"].astype(dtype)
+                      ).reshape(b, se, cfg.n_heads, cfg.head_dim)
+    h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+    if kind == "moe":
+        out, _ = M.apply_moe(p["moe"], h2, n_experts=cfg.n_experts,
+                             top_k=cfg.top_k, act=cfg.act, dtype=dtype,
+                             capacity_factor=cfg.moe_capacity_factor)
+        x = x + out
+    else:
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.act, dtype)
+    return x, leaf
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            cache_size: Optional[int] = None, dtype=jnp.bfloat16
+            ) -> Tuple[jax.Array, Cache]:
+    """Full-sequence forward emitting (last-position logits, decode cache)."""
+    enc = None
+    if cfg.is_encdec:
+        enc = run_encoder(params, cfg, batch["frames"], dtype, remat="none")
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, dtype)
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+    if cfg.rope_theta == 0 or cfg.is_encdec:
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model
+                                       )[None].astype(dtype)
+    positions = jnp.arange(x.shape[1])
+    cache_size = cache_size or x.shape[1]
+
+    windows = jnp.asarray(layer_windows(cfg))
+    thetas = jnp.asarray(layer_thetas(cfg))
+    segments = []
+    for seg, seg_p in zip(_dec_plan(cfg), params["segments"]):
+        if seg.kind == "shared":
+            x, leaf = apply_block_prefill(
+                params["shared_block"], x, "shared", cfg, positions,
+                jnp.int32(0), jnp.float32(cfg.rope_theta), dtype, cache_size)
+            segments.append(leaf)
+            continue
+        w_seg = windows[seg.start:seg.start + seg.count]
+        t_seg = thetas[seg.start:seg.start + seg.count]
+
+        def body(carry, xs, kind=seg.kind):
+            xc = carry
+            p_l, w_l, t_l = xs
+            xc, leaf = apply_block_prefill(p_l, xc, kind, cfg, positions,
+                                           w_l, t_l, dtype, cache_size,
+                                           enc=enc)
+            return xc, leaf
+
+        x, leaves = jax.lax.scan(body, x, (seg_p, w_seg, t_seg),
+                                 unroll=seg.count if scan_unroll() else 1)
+        segments.append(leaves)
+    logits = logits_fn(params, cfg, x[:, -1:], dtype)
+    return logits[:, 0], {"segments": segments}

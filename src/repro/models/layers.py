@@ -1,0 +1,643 @@
+"""Core neural layers: norms, RoPE, attention (GQA / MLA / sliding-window),
+MLPs and embeddings.
+
+Design rules:
+  * Functional: ``init_*`` builds a param dict, ``apply``-style fns are pure.
+  * Mixed precision: params live in f32 (or bf16 when ``param_dtype`` says
+    so); compute runs in ``cfg.dtype`` (bf16 on TPU) with f32 softmax/norm
+    statistics.
+  * Attention never materializes the (S, S) score matrix: ``chunked_attention``
+    runs an online-softmax scan over KV blocks (the pure-JAX twin of
+    ``repro.kernels.flash_attention``), so 32k-prefill dry-runs stay within
+    HBM and the Pallas kernel has a bit-exact XLA fallback.
+  * Sliding windows are data, not structure: a per-layer ``window`` scalar
+    drives the mask, letting heterogeneous local/global stacks (gemma-3's
+    5:1) share one scanned block.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# ----------------------------------------------------------------- init utils
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    # std d^-1/2 keeps tied-unembed logits O(1) (RMS-normed stream ~ unit)
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            / math.sqrt(d)).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh) rotated pairwise; positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                     # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    return sinusoidal_at(jnp.arange(n, dtype=jnp.float32), d)
+
+
+def sinusoidal_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding at (possibly traced) positions.  (..., d)."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+def _online_softmax_block(acc, m, l, s, v, mask):
+    """One online-softmax update.  s: (B,H,Q,K) scores; v: (B,K,Hkv->H,Dh)."""
+    s = jnp.where(mask, s, -jnp.inf)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))          # (B,H,Q)
+    # guard fully-masked rows (m_new == -inf)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+    corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhqk,bkhd->bhqd", p, v, preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def _dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Best-effort sharding constraint against the ambient mesh.
+
+    ``dims`` names one entry per axis of ``x``: "dp" (batch over the
+    data-parallel axes), "model", or None.  No-op outside a mesh context or
+    when a dim is not divisible — so CPU tests and single-device training
+    are untouched.  This is how SPMD hints survive scan carries: without
+    explicit constraints XLA's propagation gives up on the online-softmax
+    carry and *replicates* the whole attention computation (measured: 2
+    TB/layer/device on qwen2-72b train_4k; EXPERIMENTS.md §Perf).
+    """
+    import os
+    if os.environ.get("REPRO_ACT_PIN", "0") != "1":
+        # Activation pinning pays off when ZeRO-3/FSDP contractions are in
+        # play (XLA otherwise replicates the batch, §Perf A3); for pure-TP
+        # archs XLA's own placement measured best (whisper train collective
+        # 3.0 -> 10.2 s when pinned, §Perf G2).  launch/specs.build_cell
+        # sets the flag from the arch's ParallelPolicy.fsdp.
+        return x
+    from jax._src.mesh import thread_resources
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty or mesh.size == 1:
+        return x
+    try:
+        from jax._src.mesh import get_abstract_mesh
+        am = get_abstract_mesh()
+        if am is not None and getattr(am, "axis_types", None) and any(
+                "Manual" in str(t) for t in am.axis_types):
+            return x  # inside shard_map: axes are Manual, constraints illegal
+    except Exception:
+        pass
+    import numpy as _np
+    dp = _dp_axes_of(mesh)
+    dp_total = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    spec = []
+    for dim, name in enumerate(dims):
+        if (name == "dp" and dp and x.shape[dim] % dp_total == 0
+                and x.shape[dim] >= dp_total):
+            spec.append(dp if len(dp) > 1 else dp[0])
+        elif (name == "model" and "model" in mesh.axis_names
+                and x.shape[dim] % mesh.shape["model"] == 0
+                and x.shape[dim] >= mesh.shape["model"]):
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _grouped_attention(
+    q: jax.Array,               # (B, 1, H, Dh)
+    k: jax.Array,               # (B, Sk, Hkv, Dh)
+    v: jax.Array,               # (B, Sk, Hkv, Dv)
+    *,
+    q_positions, kv_positions, causal, window, kv_valid_len,
+    softmax_scale: float, block_k: int,
+) -> jax.Array:
+    """Single-token attention in the grouped (hkv, groups*sq) layout —
+    the pre-§Perf-A2 path, kept for decode (see chunked_attention)."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    groups = h // hkv
+
+    n_blocks = max((sk + block_k - 1) // block_k, 1)
+    pad = n_blocks * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kb = k.reshape(b, n_blocks, block_k, hkv, dh)
+    vb = v.reshape(b, n_blocks, block_k, hkv, dv)
+    pb = kv_positions.reshape(n_blocks, block_k)
+
+    qf = (q.astype(jnp.float32) * softmax_scale).transpose(0, 2, 1, 3)
+    qf = qf.reshape(b, hkv, groups * sq, dh)
+    valid_limit = (kv_valid_len if kv_valid_len is not None
+                   else jnp.asarray(sk))
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kblk, vblk, posblk = xs
+        s = jnp.einsum("bhqd,bkhd->bhqk", qf, kblk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        mask1 = (posblk >= 0) & (posblk < valid_limit)
+        mask = jnp.broadcast_to(mask1[None, None, None, :],
+                                (b, hkv, groups * sq, block_k))
+        qpos = jnp.tile(q_positions, (groups,))
+        if causal:
+            mask = mask & (posblk[None, None, None, :]
+                           <= qpos[None, None, :, None])
+        if window is not None:
+            wmask = (posblk[None, None, None, :]
+                     > qpos[None, None, :, None] - window)
+            mask = mask & (wmask | (window <= 0))
+        acc, m, l = _online_softmax_block(acc, m, l, s, vblk, mask)
+        return (acc, m, l), None
+
+    acc0 = jnp.zeros((b, hkv, groups * sq, dv), jnp.float32)
+    m0 = jnp.full((b, hkv, groups * sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, groups * sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), pb))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = out.reshape(b, hkv, groups, sq, dv).reshape(b, h, sq, dv)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,               # (B, Sq, H, Dh)
+    k: jax.Array,               # (B, Sk, Hkv, Dh)
+    v: jax.Array,               # (B, Sk, Hkv, Dh)
+    *,
+    q_positions: jax.Array,     # (Sq,) absolute positions of queries
+    kv_positions: jax.Array,    # (Sk,)
+    causal: bool = True,
+    window: Optional[jax.Array] = None,  # scalar; None/0 => global
+    kv_valid_len: Optional[jax.Array] = None,  # scalar: #valid kv entries
+    softmax_scale: Optional[float] = None,
+    block_k: int = 512,
+) -> jax.Array:
+    """Flash-style attention: online softmax over KV blocks via lax.scan.
+
+    Never materializes (Sq, Sk).  Head-major layout: GQA KV heads are
+    repeated to the query-head count up front (cheap: Dh-sized heads), so
+    scores/carries shard as (dp, model, ., .) — folding heads into the
+    sequence dim (the old layout) made head sharding impossible whenever
+    Hkv < mesh "model" size and let SPMD replicate the whole computation.
+    Returns (B, Sq, H, Dh).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]  # value width may differ from key width (MLA latents)
+    assert h % hkv == 0, (h, hkv)
+    groups = h // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dh)
+
+    def _model_axis_size() -> int:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+            return 1
+        return mesh.shape["model"]
+
+    import os as _os
+    if (sq == 1 or h % _model_axis_size() != 0
+            or _os.environ.get("REPRO_ACT_PIN", "0") != "1"):
+        # Grouped (hkv-major) layout when the head-major path cannot pay
+        # off:
+        #  * decode (sq == 1): the repeat re-reads the whole KV cache
+        #    ``groups``-fold and re-shards it (gemma3 long_500k collective
+        #    0.42 -> 5.8 s/step; §Perf G1);
+        #  * heads not divisible by the model axis (whisper 20H, gemma3
+        #    8H on a 16-way mesh): scores cannot head-shard anyway, and
+        #    the forced constraints fought XLA's own layout (whisper
+        #    train collective 3.0 -> 10.2 s; §Perf G2).
+        return _grouped_attention(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, window=window, kv_valid_len=kv_valid_len,
+            softmax_scale=scale, block_k=block_k)
+    if groups > 1:
+        # repeat KV to query heads (MLA calls in with hkv == h already)
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    k = mesh_constrain(k, "dp", None, "model", None)
+    v = mesh_constrain(v, "dp", None, "model", None)
+
+    # pad kv length to a multiple of block_k
+    n_blocks = max((sk + block_k - 1) // block_k, 1)
+    pad = n_blocks * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kb = k.reshape(b, n_blocks, block_k, h, dh)
+    vb = v.reshape(b, n_blocks, block_k, h, dv)
+    pb = kv_positions.reshape(n_blocks, block_k)
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,Sq,Dh)
+    qf = mesh_constrain(qf, "dp", "model", None, None)
+
+    valid_limit = kv_valid_len if kv_valid_len is not None else jnp.asarray(sk)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kblk, vblk, posblk = xs                     # (B,bk,H,dh) ...
+        s = jnp.einsum("bhqd,bkhd->bhqk", qf, kblk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        s = mesh_constrain(s, "dp", "model", None, None)
+        # mask: validity + causal + window — broadcast (1,1,Sq,bk), never
+        # materialized at (B,H,...)
+        mask = ((posblk >= 0) & (posblk < valid_limit))[None, None, None, :]
+        if causal:
+            mask = mask & (posblk[None, None, None, :]
+                           <= q_positions[None, None, :, None])
+        if window is not None:
+            wmask = (posblk[None, None, None, :]
+                     > q_positions[None, None, :, None] - window)
+            mask = mask & (wmask | (window <= 0))
+        acc, m, l = _online_softmax_block(acc, m, l, s, vblk, mask)
+        return (mesh_constrain(acc, "dp", "model", None, None),
+                mesh_constrain(m, "dp", "model", None),
+                mesh_constrain(l, "dp", "model", None)), None
+
+    acc0 = mesh_constrain(jnp.zeros((b, h, sq, dv), jnp.float32),
+                          "dp", "model", None, None)
+    m0 = mesh_constrain(jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+                        "dp", "model", None)
+    l0 = mesh_constrain(jnp.zeros((b, h, sq), jnp.float32),
+                        "dp", "model", None)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), pb))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- GQA block
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             bias: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype,
+                         scale=1.0 / math.sqrt(n_heads * head_dim)),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_project_qkv(p: Params, x: jax.Array, n_heads: int, n_kv: int,
+                    head_dim: int, positions: jax.Array, rope_theta: float,
+                    dtype) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    xq = x.astype(dtype) @ p["wq"].astype(dtype)
+    xk = x.astype(dtype) @ p["wk"].astype(dtype)
+    xv = x.astype(dtype) @ p["wv"].astype(dtype)
+    if "bq" in p:
+        xq = xq + p["bq"].astype(dtype)
+        xk = xk + p["bk"].astype(dtype)
+        xv = xv + p["bv"].astype(dtype)
+    dp = "dp" if s > 1 else None     # decode: let XLA place the batch (B2)
+    q = mesh_constrain(xq.reshape(b, s, n_heads, head_dim),
+                       dp, None, "model", None)
+    k = mesh_constrain(xk.reshape(b, s, n_kv, head_dim),
+                       dp, None, "model", None)
+    v = mesh_constrain(xv.reshape(b, s, n_kv, head_dim),
+                       dp, None, "model", None)
+    if rope_theta is not None:  # static decision; theta itself may be traced
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+                  head_dim: int, positions: jax.Array, rope_theta: float,
+                  causal: bool, window: Optional[jax.Array], dtype,
+                  block_k: int = 512) -> jax.Array:
+    """Self-attention over x (train/prefill path)."""
+    b, s, _ = x.shape
+    q, k, v = gqa_project_qkv(p, x, n_heads, n_kv, head_dim, positions,
+                              rope_theta, dtype)
+    out = chunked_attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=causal,
+                            window=window, block_k=block_k)
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out.astype(dtype) @ p["wo"].astype(dtype)
+
+
+def gqa_decode(p: Params, x: jax.Array, cache_k: jax.Array,
+               cache_v: jax.Array, cache_len: jax.Array, *, n_heads: int,
+               n_kv: int, head_dim: int, rope_theta: float,
+               window: Optional[jax.Array], dtype,
+               block_k: int = 1024):
+    """One-token decode.  cache_[kv]: (B, S_max, Hkv, Dh); returns
+    (out, new_cache_k, new_cache_v)."""
+    b, one, _ = x.shape
+    assert one == 1
+    pos = jnp.asarray(cache_len)[None]  # scalar position of the new token
+    q, k, v = gqa_project_qkv(p, x, n_heads, n_kv, head_dim, pos,
+                              rope_theta, dtype)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    s_max = cache_k.shape[1]
+    kv_pos = jnp.arange(s_max)
+    out = chunked_attention(
+        q, cache_k.astype(dtype), cache_v.astype(dtype),
+        q_positions=pos, kv_positions=kv_pos, causal=True, window=window,
+        kv_valid_len=cache_len + 1, block_k=block_k)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    return out.astype(dtype) @ p["wo"].astype(dtype), cache_k, cache_v
+
+
+# ----------------------------------------------------------------- MLA block
+def init_mla(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             qk_nope: int, qk_rope: int, v_head: int,
+             dtype=jnp.float32) -> Params:
+    """DeepSeek-V2 Multi-head Latent Attention (arXiv:2405.04434)."""
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d_model, q_lora, dtype),
+        "wq_b": dense_init(ks[1], q_lora, n_heads * (qk_nope + qk_rope), dtype),
+        "wkv_a": dense_init(ks[2], d_model, kv_lora + qk_rope, dtype),
+        "wk_b": dense_init(ks[3], kv_lora, n_heads * qk_nope, dtype),
+        "wv_b": dense_init(ks[4], kv_lora, n_heads * v_head, dtype),
+        "wo": dense_init(ks[5], n_heads * v_head, d_model, dtype,
+                         scale=1.0 / math.sqrt(n_heads * v_head)),
+        "q_norm": init_rmsnorm(q_lora, dtype),
+        "kv_norm": init_rmsnorm(kv_lora, dtype),
+    }
+
+
+def mla_latent(p: Params, x: jax.Array, positions, rope_theta, dtype,
+               *, kv_lora: int, qk_rope: int):
+    """Project x to the compressed latent (c_kv, k_rope) pair."""
+    b, s, _ = x.shape
+    kv = x.astype(dtype) @ p["wkv_a"].astype(dtype)
+    c_kv, k_rope = kv[..., :kv_lora], kv[..., kv_lora:]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope.reshape(b, s, 1, qk_rope), positions,
+                        rope_theta)
+    return c_kv, k_rope  # (B,S,kv_lora), (B,S,1,qk_rope)
+
+
+def mla_attention_from_latent(p: Params, x: jax.Array, c_kv, k_rope, *,
+                              n_heads: int, qk_nope: int, qk_rope: int,
+                              v_head: int, q_positions, kv_positions,
+                              rope_theta: float, causal: bool, dtype,
+                              kv_valid_len=None, block_k: int = 512):
+    """Attention of queries from x against a latent KV (shared train/decode)."""
+    b, sq, _ = x.shape
+    q = rmsnorm(p["q_norm"], x.astype(dtype) @ p["wq_a"].astype(dtype))
+    q = (q @ p["wq_b"].astype(dtype)).reshape(b, sq, n_heads,
+                                              qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, q_positions, rope_theta)
+
+    sk = c_kv.shape[1]
+    k_nope = (c_kv @ p["wk_b"].astype(dtype)).reshape(b, sk, n_heads, qk_nope)
+    v = (c_kv @ p["wv_b"].astype(dtype)).reshape(b, sk, n_heads, v_head)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, sk, n_heads, qk_rope))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(
+        q_full, k_full, v, q_positions=q_positions, kv_positions=kv_positions,
+        causal=causal, window=None, kv_valid_len=kv_valid_len,
+        softmax_scale=1.0 / math.sqrt(qk_nope + qk_rope), block_k=block_k)
+    out = out.reshape(b, sq, n_heads * v_head)
+    return out.astype(dtype) @ p["wo"].astype(dtype)
+
+
+def mla_decode(p: Params, x: jax.Array, cache_ckv: jax.Array,
+               cache_krope: jax.Array, cache_len: jax.Array, *,
+               n_heads: int, kv_lora: int, qk_nope: int, qk_rope: int,
+               v_head: int, rope_theta: float, dtype,
+               block_k: int = 1024):
+    """One-token MLA decode with weight absorption.
+
+    The latent cache is the *compressed* (c_kv, k_rope) pair — the whole
+    point of MLA: cache width kv_lora + qk_rope (576 for DeepSeek-V2)
+    instead of 2 * H * Dh.  Queries are mapped into latent space through
+    W_kb (absorbed), scores run against the latent directly (one logical KV
+    head), and outputs are mapped back through W_vb.
+    """
+    b, one, _ = x.shape
+    assert one == 1
+    pos = jnp.asarray(cache_len)[None]
+    c_kv, k_rope = mla_latent(p, x, pos, rope_theta, dtype,
+                              kv_lora=kv_lora, qk_rope=qk_rope)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), cache_len, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope[:, :, 0, :].astype(cache_krope.dtype),
+        cache_len, axis=1)
+
+    q = rmsnorm(p["q_norm"], x.astype(dtype) @ p["wq_a"].astype(dtype))
+    q = (q @ p["wq_b"].astype(dtype)).reshape(b, 1, n_heads,
+                                              qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    wk_b = p["wk_b"].astype(dtype).reshape(kv_lora, n_heads, qk_nope)
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, wk_b)   # absorbed queries
+
+    s_max = cache_ckv.shape[1]
+    # Direct latent-space attention (sq = 1, so (B,H,S) scores are small).
+    # The latent dim is model-sharded (models/sharding.cache_specs): both
+    # score einsums contract over it, so each model-rank computes a partial
+    # score from its latent slice and SPMD inserts ONE all-reduce of the
+    # (B,1,H,S) scores — replacing the per-step all-gather of the whole
+    # compressed cache that a sequence-sharded layout forces (measured
+    # 119 GB/step/device on deepseek-v2 decode_32k; §Perf B1).
+    ckv = mesh_constrain(cache_ckv.astype(dtype), "dp", None, "model")
+    krp = mesh_constrain(cache_krope.astype(dtype), "dp", None, "model")
+    q_lat = mesh_constrain(q_lat, "dp", None, None, "model")
+    q_rp = mesh_constrain(q_rope, "dp", None, None, "model")
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    s = (jnp.einsum("bqhl,bsl->bqhs", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bqhs", q_rp.astype(jnp.float32),
+                      krp.astype(jnp.float32))) * scale
+    valid = jnp.arange(s_max)[None, None, None, :] <= cache_len
+    s = jnp.where(valid, s, -jnp.inf)
+    probs = jax.nn.softmax(s, axis=-1)                   # (B,1,H,S) f32
+    out = jnp.einsum("bqhs,bsl->bqhl", probs, ckv.astype(jnp.float32))
+    out = mesh_constrain(out, "dp", None, None, "model").astype(dtype)
+    wv_b = p["wv_b"].astype(dtype).reshape(kv_lora, n_heads, v_head)
+    out = jnp.einsum("bqhl,lhv->bqhv", out, wv_b)
+    out = out.reshape(b, 1, n_heads * v_head)
+    return (out.astype(dtype) @ p["wo"].astype(dtype),
+            cache_ckv, cache_krope)
+
+
+# --------------------------------------------------- cross attention (whisper)
+def init_cross_attention(key, d_model: int, n_heads: int, head_dim: int,
+                         dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype,
+                         scale=1.0 / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def cross_attention(p: Params, x: jax.Array, enc: jax.Array, *,
+                    n_heads: int, head_dim: int, dtype,
+                    block_k: int = 512) -> jax.Array:
+    """Decoder->encoder attention (no positions, bidirectional)."""
+    b, sq, _ = x.shape
+    sk = enc.shape[1]
+    q = (x.astype(dtype) @ p["wq"].astype(dtype)).reshape(b, sq, n_heads,
+                                                          head_dim)
+    k = (enc.astype(dtype) @ p["wk"].astype(dtype)).reshape(b, sk, n_heads,
+                                                            head_dim)
+    v = (enc.astype(dtype) @ p["wv"].astype(dtype)).reshape(b, sk, n_heads,
+                                                            head_dim)
+    out = chunked_attention(q, k, v, q_positions=jnp.arange(sq),
+                            kv_positions=jnp.arange(sk), causal=False,
+                            window=None, block_k=block_k)
+    out = out.reshape(b, sq, n_heads * head_dim)
+    return out.astype(dtype) @ p["wo"].astype(dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w2": dense_init(ks[1], d_ff, d_model, dtype,
+                          scale=1.0 / math.sqrt(d_ff))}
+    if act in ("swiglu", "geglu"):
+        p["w1"] = dense_init(ks[0], d_model, d_ff, dtype)
+        p["w3"] = dense_init(ks[2], d_model, d_ff, dtype)
+    else:
+        p["w1"] = dense_init(ks[0], d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, act: str, dtype) -> jax.Array:
+    x = x.astype(dtype)
+    h = x @ p["w1"].astype(dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(dtype))
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"].astype(dtype))
+    else:
+        h = jax.nn.gelu(h)
+    # batch stays dp-sharded; ff stays model-sharded.  Without the hint XLA
+    # resolves FSDP-sharded contractions by replicating the batch instead of
+    # gathering the (much smaller) weight shard (§Perf A3).  At decode
+    # (seq 1) the trade inverts: activations are ~MB while ZeRO-3 weight
+    # gathers are ~GB/layer, so leave the batch placement to XLA (§Perf B2).
+    dp = "dp" if x.shape[1] > 1 else None
+    h = mesh_constrain(h, dp, None, "model")
+    out = h @ p["w2"].astype(dtype)
+    return mesh_constrain(out, dp, None, None)
+
+
+# ----------------------------------------------------------------- embeddings
+def init_embed(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": embed_init(key, vocab, d, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    x = p["table"].astype(dtype)[tokens]
+    if tokens.ndim >= 2 and tokens.shape[1] == 1:
+        return x                      # decode: XLA places the batch (G1)
+    return mesh_constrain(x, "dp", None, None)
+
+
+def unembed(p_embed: Params, x: jax.Array, dtype,
+            w_unembed: Optional[jax.Array] = None) -> jax.Array:
+    w = w_unembed if w_unembed is not None else p_embed["table"].T
+    logits = x.astype(dtype) @ w.astype(dtype)
+    if x.ndim >= 2 and x.shape[1] == 1:
+        return logits                 # decode: XLA places the batch (G1)
+    return mesh_constrain(logits, "dp", None, "model")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy in f32, with optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss > 0:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    return loss

@@ -1,0 +1,170 @@
+"""Partition rules: parameter pytree -> PartitionSpec pytree.
+
+Rules are keyed on leaf *names* (every parameter tensor in this codebase has
+a unique, meaningful name).  Conventions:
+
+  * ``model`` axis: attention heads / FFN hidden / experts / vocab (TP).
+  * ``data`` (+ ``pod``): batch; with ``fsdp=True`` additionally shards a
+    remaining parameter dim (ZeRO-3-style) so 70B+ archs fit HBM.
+  * Stacked layer leading axes are never sharded (they are scanned).
+  * Anything not divisible by the mesh axis stays replicated — the rule fn
+    checks divisibility against the actual mesh, so the same rules serve the
+    16x16 single-pod and 2x16x16 multi-pod meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+# leaf name -> (dims to try sharding over "model", in preference order)
+# dims are indexed from the END (negative), so stacked leading axes are
+# transparent.
+_MODEL_RULES: Dict[str, Tuple[int, ...]] = {
+    # embeddings
+    "table": (-2,),          # (V, d): shard vocab
+    "unembed": (-1,),        # (d, V): shard vocab
+    # attention
+    "wq": (-1,), "wk": (-1,), "wv": (-1,), "wo": (-2,),
+    "bq": (-1,), "bk": (-1,), "bv": (-1,),
+    # MLA
+    "wq_a": (-1,), "wq_b": (-1,), "wkv_a": (-1,),
+    "wk_b": (-1,), "wv_b": (-1,),
+    # MLP
+    "w1": (-1,), "w3": (-1,), "w2": (-2,),
+    # MoE (experts dim is dim -3 for w1/w3/w2 — handled specially below)
+    "router": (),
+    # Mamba
+    "in_z": (-1,), "in_x": (-1,), "in_dt": (-1,),
+    "in_b": (), "in_c": (),
+    "conv_x": (-1,), "conv_bias_x": (-1,),
+    "conv_bc": (), "conv_bias_bc": (),
+    "a_log": (-1,), "dt_bias": (-1,), "d_skip": (-1,),
+    "out_proj": (-2,),
+    # norms
+    "scale": (), "bias": (),
+}
+
+_MOE_EXPERT_LEAVES = {"w1", "w2", "w3"}  # when ndim>=3 with experts leading
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _path_has(path, key: str) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == key
+               for e in path)
+
+
+def spec_for_param(path, leaf, mesh: Mesh, *, fsdp: bool = False,
+                   dp_axes: Tuple[str, ...] = ("data",)) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    ndim = len(shape)
+    spec = [None] * ndim
+    model = _axis_size(mesh, "model")
+    dp = int(np.prod([_axis_size(mesh, a) for a in dp_axes]))
+
+    in_moe = _path_has(path, "moe")
+    if in_moe and name in _MOE_EXPERT_LEAVES and ndim >= 3:
+        # (..., E, d_in, d_out): shard experts over model
+        e_dim = ndim - 3
+        if shape[e_dim] % model == 0:
+            spec[e_dim] = "model"
+        if fsdp:
+            # ZeRO-3 second dim: always the FF dim (w1/w3: -1, w2: -2) so
+            # storage matches the decode-mode 2D dispatch (moe.apply_moe
+            # psums over (model, data) with ff sliced over data; §Perf B3)
+            ff_dim = ndim - 1 if name in ("w1", "w3") else ndim - 2
+            if spec[ff_dim] is None and shape[ff_dim] % dp == 0:
+                spec[ff_dim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        return P(*spec)
+    else:
+        for d in _MODEL_RULES.get(name, ()):
+            dim = ndim + d
+            if 0 <= dim < ndim and shape[dim] % model == 0:
+                spec[dim] = "model"
+                break
+
+    if fsdp and ndim >= 2:
+        # ZeRO-3-style: shard one remaining dim over the dp axes.  Skip the
+        # stacked layer axis (dim 0 of ndim>=3 stacks is scan-indexed, but
+        # sharding it is legal and free — scan slices locally; we still
+        # prefer a "real" dim for layout friendliness).
+        for dim in range(ndim - 2, ndim):
+            if spec[dim] is None and shape[dim] % dp == 0:
+                spec[dim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = False,
+                dp_axes: Tuple[str, ...] = ("data",)):
+    """PartitionSpec pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: spec_for_param(p, x, mesh, fsdp=fsdp, dp_axes=dp_axes),
+        params)
+
+
+def param_shardings(params, mesh: Mesh, **kw):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, **kw))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Sharding for (B, ...) batch arrays: batch over all dp axes."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def cache_specs(cache, mesh: Mesh):
+    """Decode-cache shardings: batch over dp axes, heads/features over model.
+
+    Cache layouts (see models/decode.py):
+      (L, B, S, Hkv, Dh) — batch dim 1; shard Hkv (or Dh) over model.
+      (B, S, Hkv, Dh)    — shared blocks; batch dim 0.
+      MLA (L, B, S, lora) — batch dim 1, latent replicated over model.
+      Mamba conv/state   — batch dim 1, heads/d_inner over model.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    model = _axis_size(mesh, "model")
+    batch_total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+
+    def leaf_spec(path, x):
+        shape = x.shape
+        ndim = len(shape)
+        name = _leaf_name(path)
+        # locate batch dim: stacked leaves have it at 1, shared blocks at 0
+        bdim = 1 if ndim >= 4 or name in ("state", "conv_x", "conv_bc") else 0
+        if ndim == 4 and name in ("k", "v", "ck", "cv"):
+            bdim = 0  # shared-block cache (B, S, H, Dh)
+        spec = [None] * ndim
+        if shape[bdim] % batch_total == 0 and shape[bdim] > 1:
+            spec[bdim] = dp_entry
+        if name in ("ckv", "krope"):
+            # MLA latent cache: shard the LATENT dim over model — decode
+            # contracts over it (partial scores + one all-reduce).  Sharding
+            # the sequence dim instead forces a full cache all-gather every
+            # decode step (§Perf B1).
+            if shape[-1] % model == 0 and shape[-1] >= model:
+                spec[-1] = "model"
+            return P(*spec)
+        # shard a trailing head-ish dim over model
+        for dim in range(ndim - 2, ndim):
+            if dim > bdim and spec[dim] is None and shape[dim] % model == 0:
+                spec[dim] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

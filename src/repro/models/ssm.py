@@ -1,0 +1,242 @@
+"""Mamba-2 block via State-Space Duality (SSD), arXiv:2405.21060.
+
+The selective SSM
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,    y_t = C_t h_t + D x_t
+is evaluated with the chunked SSD algorithm: within a chunk the recurrence
+is expanded into a (masked, decay-weighted) attention-like matmul — MXU
+food — and across chunks only the (nheads, headdim, dstate) states are
+carried through a ``lax.scan``.  This is the TPU-native adaptation of the
+paper's GPU kernel: chunk sizes are MXU-aligned (128) and the inter-chunk
+scan is O(S/chunk).
+
+Projections are kept as *separate* tensors (z/x/B/C/dt) rather than one
+fused ``in_proj`` so tensor parallelism can shard the head-structured parts
+(z, x, dt over heads) while replicating the tiny shared B/C projections
+(ngroups=1 semantics).
+
+Shapes follow the Mamba-2 reference: d_inner = expand * d_model,
+nheads = d_inner / headdim, B/C shared across heads (ngroups=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    nheads: int
+    headdim: int
+    dstate: int
+    d_conv: int = 4
+
+    @staticmethod
+    def from_config(d_model: int, ssm_state: int, expand: int = 2,
+                    headdim: int = 64) -> "SSMDims":
+        d_inner = expand * d_model
+        return SSMDims(d_model=d_model, d_inner=d_inner,
+                       nheads=d_inner // headdim, headdim=headdim,
+                       dstate=ssm_state)
+
+
+def init_mamba2(key, dims: SSMDims, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], dims.d_model, dims.d_inner, dtype),
+        "in_x": dense_init(ks[1], dims.d_model, dims.d_inner, dtype),
+        "in_b": dense_init(ks[2], dims.d_model, dims.dstate, dtype),
+        "in_c": dense_init(ks[3], dims.d_model, dims.dstate, dtype),
+        "in_dt": dense_init(ks[4], dims.d_model, dims.nheads, dtype),
+        "conv_x": (jax.random.normal(ks[5], (dims.d_conv, dims.d_inner),
+                                     jnp.float32)
+                   / math.sqrt(dims.d_conv)).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[6], (dims.d_conv, 2 * dims.dstate),
+                                      jnp.float32)
+                    / math.sqrt(dims.d_conv)).astype(dtype),
+        "conv_bias_x": jnp.zeros((dims.d_inner,), dtype),
+        "conv_bias_bc": jnp.zeros((2 * dims.dstate,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dims.nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((dims.nheads,), jnp.float32),
+        "d_skip": jnp.ones((dims.nheads,), jnp.float32),
+        "out_norm": init_rmsnorm(dims.d_inner, dtype),
+        "out_proj": dense_init(ks[7], dims.d_inner, dims.d_model, dtype,
+                               scale=1.0 / math.sqrt(dims.d_inner)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) where state carries the last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_state = xx[:, -(k - 1):, :] if k > 1 else state
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def _project(p: Params, x: jax.Array, dtype):
+    xd = x.astype(dtype)
+    z = xd @ p["in_z"].astype(dtype)
+    xin = xd @ p["in_x"].astype(dtype)
+    bc = jnp.concatenate([xd @ p["in_b"].astype(dtype),
+                          xd @ p["in_c"].astype(dtype)], axis=-1)
+    dt = xd @ p["in_dt"].astype(dtype)
+    return z, xin, bc, dt
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int = 128,
+                initial_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   per-head inputs
+    dt: (B, S, H)      positive step sizes (after softplus)
+    a:  (H,)           positive decay rates (A = -a)
+    b:  (B, S, N)      input projections  (shared across heads)
+    c:  (B, S, N)      output projections
+    Returns (y (B,S,H,P), final_state (B,H,P,N) f32).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    # per-step log decay and cumulative decay within each chunk
+    la = -a[None, None, None, :] * dtc                 # (B,NC,L,H) log decay
+    cum = jnp.cumsum(la, axis=2)                       # inclusive cumsum
+
+    # intra-chunk: y_t = sum_{u<=t} C_t . (prod decay (u,t]) dt_u B_u x_u
+    # decay(u->t) = exp(cum_t - cum_u)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,L,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    li = jnp.where(mask[None, None, :, :, None], li, -jnp.inf)
+    decay = jnp.exp(li)
+    cb = jnp.einsum("zcln,zcmn->zclm", cc, bc,
+                    preferred_element_type=jnp.float32)  # (B,NC,L,L)
+    w = cb[..., None] * decay                           # (B,NC,L,L,H)
+    y_intra = jnp.einsum("zclmh,zcmh,zcmhp->zclhp", w, dtc, xc,
+                         preferred_element_type=jnp.float32)
+
+    # chunk-level state contributions: state_c = sum_u decay(u->end) dt B x
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,NC,L,H)
+    sc = jnp.einsum("zclh,zclh,zclhp,zcln->zchpn", tail, dtc, xc, bc,
+                    preferred_element_type=jnp.float32)  # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,NC,H)
+
+    def scan_fn(carry, xs):
+        s_in = carry                                    # (B,H,P,N)
+        sc_c, dec_c = xs                                # (B,H,P,N), (B,H)
+        s_out = s_in * dec_c[:, :, None, None] + sc_c
+        return s_out, s_in                              # emit state *before*
+
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((bsz, h, p, n), jnp.float32))
+    final_state, states_before = jax.lax.scan(
+        scan_fn, init,
+        (sc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    states_before = states_before.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # inter-chunk: y_t += C_t . decay(start->t) state_before
+    inter_decay = jnp.exp(cum)                          # (B,NC,L,H)
+    y_inter = jnp.einsum("zcln,zclh,zchpn->zclhp", cc, inter_decay,
+                         states_before, preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, h, p)[:, :s]
+    return y, final_state
+
+
+def apply_mamba2(p: Params, x: jax.Array, dims: SSMDims, dtype,
+                 chunk: int = 128, initial_state=None, return_cache=False):
+    """Full-sequence Mamba-2 block.  x: (B, S, d_model) -> same.
+
+    With ``return_cache`` also returns the :class:`MambaCache` holding the
+    final SSM state and conv tails (the prefill -> decode hand-off)."""
+    bsz, s, _ = x.shape
+    z, xin, bc, dt = _project(p, x, dtype)
+    xin, conv_x_state = _causal_conv(xin, p["conv_x"].astype(dtype),
+                                     p["conv_bias_x"].astype(dtype))
+    bc, conv_bc_state = _causal_conv(bc, p["conv_bc"].astype(dtype),
+                                     p["conv_bias_bc"].astype(dtype))
+    b = bc[..., :dims.dstate]
+    c = bc[..., dims.dstate:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, s, dims.nheads, dims.headdim).astype(jnp.float32)
+    y, state = ssd_chunked(xh, dt, a, b.astype(jnp.float32),
+                           c.astype(jnp.float32), chunk=chunk,
+                           initial_state=initial_state)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, dims.d_inner).astype(dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z.astype(dtype)))
+    out = y @ p["out_proj"].astype(dtype)
+    if return_cache:
+        return out, MambaCache(conv_x=conv_x_state, conv_bc=conv_bc_state,
+                               state=state)
+    return out
+
+
+class MambaCache(NamedTuple):
+    conv_x: jax.Array   # (B, K-1, d_inner)
+    conv_bc: jax.Array  # (B, K-1, 2N)
+    state: jax.Array    # (B, H, P, N) f32
+
+
+def init_mamba_cache(batch: int, dims: SSMDims, dtype) -> MambaCache:
+    return MambaCache(
+        conv_x=jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype),
+        conv_bc=jnp.zeros((batch, dims.d_conv - 1, 2 * dims.dstate), dtype),
+        state=jnp.zeros((batch, dims.nheads, dims.headdim, dims.dstate),
+                        jnp.float32),
+    )
+
+
+def mamba2_decode(p: Params, x: jax.Array, cache: MambaCache,
+                  dims: SSMDims, dtype):
+    """One-token recurrent step (O(1) in sequence length)."""
+    bsz, one, _ = x.shape
+    assert one == 1
+    z, xin, bc, dt = _project(p, x, dtype)
+    xin, conv_x = _causal_conv(xin, p["conv_x"].astype(dtype),
+                               p["conv_bias_x"].astype(dtype), cache.conv_x)
+    bc, conv_bc = _causal_conv(bc, p["conv_bc"].astype(dtype),
+                               p["conv_bias_bc"].astype(dtype), cache.conv_bc)
+    b = bc[..., :dims.dstate]
+    c = bc[..., dims.dstate:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = jnp.exp(p["a_log"])
+    decay = jnp.exp(-a[None, :] * dt)                    # (B,H)
+    xh = xin.reshape(bsz, dims.nheads, dims.headdim).astype(jnp.float32)
+    bu = b[:, 0].astype(jnp.float32)                     # (B,N)
+    cu = c[:, 0].astype(jnp.float32)
+    state = (cache.state * decay[:, :, None, None]
+             + dt[:, :, None, None] * xh[:, :, :, None] * bu[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", state, cu)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, dims.d_inner).astype(dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z.astype(dtype)))
+    return (y @ p["out_proj"].astype(dtype),
+            MambaCache(conv_x=conv_x, conv_bc=conv_bc, state=state))

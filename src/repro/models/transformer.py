@@ -1,0 +1,336 @@
+"""Unified multi-family LM: dense / GQA / MLA / MoE / SSM / hybrid /
+encoder-decoder / VLM — one code path, configured by
+:class:`repro.configs.base.ModelConfig`.
+
+Layer stacking
+--------------
+The layer stack is compiled as a sequence of *segments*: contiguous runs of
+structurally-identical blocks whose parameters are stacked along a leading
+axis and executed with ``jax.lax.scan`` (compile time O(#segments), not
+O(#layers)).  Heterogeneity that does not change parameter shapes — gemma-3's
+local/global windows and dual RoPE thetas — is expressed as *per-layer scanned
+scalars*, so a 34-layer 5:1 pattern is still ONE scan.  Structural
+heterogeneity (zamba2's shared attention block, DeepSeek's first dense layer)
+splits the plan into separate segments; zamba2's shared block has a single
+parameter set applied at every marker.
+
+Three execution modes share the block code:
+  * ``forward_train`` — full-sequence, cross-entropy loss (+ MoE aux).
+  * ``prefill``       — full-sequence, returns last-position logits and the
+                        decode cache (KV / MLA-latent / SSM state).
+  * ``decode_step``   — one token against the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str    # attn | moe | mamba | shared
+    count: int
+    start: int   # global index of the first layer in this segment
+
+
+def build_plan(cfg: ModelConfig) -> Tuple[Segment, ...]:
+    """Decoder-stack segment plan (encoder handled separately)."""
+    segs: List[Segment] = []
+    if cfg.family == "ssm":
+        segs.append(Segment("mamba", cfg.n_layers, 0))
+    elif cfg.family == "hybrid":
+        done = 0
+        while done < cfg.n_layers:
+            run = min(cfg.shared_attn_every, cfg.n_layers - done)
+            segs.append(Segment("mamba", run, done))
+            done += run
+            if done < cfg.n_layers or run == cfg.shared_attn_every:
+                segs.append(Segment("shared", 1, done))
+    elif cfg.n_experts > 0:
+        if cfg.first_dense_layers:
+            segs.append(Segment("attn", cfg.first_dense_layers, 0))
+        segs.append(Segment("moe", cfg.n_layers - cfg.first_dense_layers,
+                            cfg.first_dense_layers))
+    else:
+        segs.append(Segment("attn", cfg.n_layers, 0))
+    return tuple(segs)
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding window (0 = global attention)."""
+    w = np.zeros(cfg.n_layers, dtype=np.int32)
+    if cfg.sliding_window:
+        if cfg.global_every:
+            w[:] = cfg.sliding_window
+            w[cfg.global_every - 1::cfg.global_every] = 0   # LLLLLG pattern
+        else:
+            w[:] = cfg.sliding_window
+    return w
+
+
+def layer_thetas(cfg: ModelConfig) -> np.ndarray:
+    t = np.full(cfg.n_layers, cfg.rope_theta, dtype=np.float32)
+    if cfg.rope_theta_global and cfg.global_every:
+        t[cfg.global_every - 1::cfg.global_every] = cfg.rope_theta_global
+    return t
+
+
+def _ssm_dims(cfg: ModelConfig) -> S.SSMDims:
+    return S.SSMDims.from_config(cfg.d_model, cfg.ssm_state,
+                                 cfg.ssm_expand, cfg.ssm_headdim)
+
+
+# ----------------------------------------------------------------- init
+def _init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.attn == "mla":
+        return L.init_mla(key, cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora,
+                          kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope,
+                          qk_rope=cfg.qk_rope, v_head=cfg.v_head, dtype=dtype)
+    return L.init_gqa(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.head_dim, cfg.qkv_bias, dtype)
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "mamba":
+        return {"ln": L.init_norm(cfg.norm, d, dtype),
+                "mixer": S.init_mamba2(ks[0], _ssm_dims(cfg), dtype)}
+    p: Params = {"ln1": L.init_norm(cfg.norm, d, dtype),
+                 "attn": _init_attn(ks[0], cfg, dtype),
+                 "ln2": L.init_norm(cfg.norm, d, dtype)}
+    if kind == "moe":
+        p["moe"] = M.init_moe(ks[1], d, cfg.moe_d_ff, cfg.n_experts,
+                              cfg.n_shared_experts, cfg.act, dtype)
+    elif kind == "dec":
+        p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, dtype)
+        p["lnx"] = L.init_norm(cfg.norm, d, dtype)
+        p["cross"] = L.init_cross_attention(ks[2], d, cfg.n_heads,
+                                            cfg.head_dim, dtype)
+    else:  # attn | shared | enc
+        p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _stacked_init(key, cfg, kind, count, dtype):
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: init_block(k, cfg, kind, dtype))(keys)
+
+
+def init_params(rng, cfg: ModelConfig, param_dtype=jnp.float32) -> Params:
+    ks = iter(jax.random.split(rng, 64))
+    params: Params = {"embed": L.init_embed(next(ks), cfg.vocab, cfg.d_model,
+                                            param_dtype)}
+    params["segments"] = [
+        _stacked_init(next(ks), cfg, seg.kind, seg.count, param_dtype)
+        if seg.kind != "shared" else None
+        for seg in build_plan(cfg)
+    ]
+    if cfg.shared_attn_every:
+        params["shared_block"] = init_block(next(ks), cfg, "shared",
+                                            param_dtype)
+    params["final_norm"] = L.init_norm(cfg.norm, cfg.d_model, param_dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(next(ks), cfg.d_model, cfg.vocab,
+                                         param_dtype)
+    if cfg.is_encdec:
+        params["enc_segments"] = [
+            _stacked_init(next(ks), cfg, "enc", cfg.enc_layers, param_dtype)]
+        params["enc_norm"] = L.init_norm(cfg.norm, cfg.d_model, param_dtype)
+        # decoder segments replace the plain plan: rebuild as "dec" blocks
+        params["segments"] = [
+            _stacked_init(next(ks), cfg, "dec", cfg.n_layers, param_dtype)]
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+# ----------------------------------------------------------------- blocks
+def _self_attention(p, h, cfg: ModelConfig, positions, window, theta, dtype,
+                    causal=True):
+    theta_arg = None if cfg.rope_theta == 0 else theta
+    if cfg.attn == "mla":
+        c_kv, k_rope = L.mla_latent(p, h, positions, theta, dtype,
+                                    kv_lora=cfg.kv_lora, qk_rope=cfg.qk_rope)
+        return L.mla_attention_from_latent(
+            p, h, c_kv, k_rope, n_heads=cfg.n_heads, qk_nope=cfg.qk_nope,
+            qk_rope=cfg.qk_rope, v_head=cfg.v_head, q_positions=positions,
+            kv_positions=positions, rope_theta=theta, causal=causal,
+            dtype=dtype)
+    return L.gqa_attention(
+        p, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, positions=positions, rope_theta=theta_arg,
+        causal=causal, window=window, dtype=dtype)
+
+
+def apply_block(p, x, kind: str, cfg: ModelConfig, positions, window, theta,
+                dtype, enc=None, causal=True):
+    """Full-sequence block application.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if x.shape[1] > 1:                          # decode: XLA places batch
+        x = L.mesh_constrain(x, "dp", None, None)  # residual: batch dp
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["ln"], x)
+        return x + S.apply_mamba2(p["mixer"], h, _ssm_dims(cfg), dtype), aux
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    x = x + _self_attention(p["attn"], h, cfg, positions, window, theta,
+                            dtype, causal=causal)
+    if kind == "dec":
+        hx = L.apply_norm(cfg.norm, p["lnx"], x)
+        x = x + L.cross_attention(p["cross"], hx, enc, n_heads=cfg.n_heads,
+                                  head_dim=cfg.head_dim, dtype=dtype)
+    h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+    if kind == "moe":
+        out, aux = M.apply_moe(p["moe"], h2, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, act=cfg.act, dtype=dtype,
+                               capacity_factor=cfg.moe_capacity_factor)
+        x = x + out
+    else:
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.act, dtype)
+    return x, aux
+
+
+def scan_unroll() -> bool:
+    """Fully unroll layer scans (dry-run analysis mode).
+
+    HLO cost analysis visits a while-loop body ONCE regardless of trip
+    count, so the dry-run sets REPRO_UNROLL_SCAN=1 to lower layer stacks
+    unrolled — exact FLOP/byte/collective accounting at higher compile
+    cost.  Training/serving keep the scan (compile time O(#segments)).
+    """
+    return os.environ.get("REPRO_UNROLL_SCAN", "0") == "1"
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if mode == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def run_stack(params, cfg: ModelConfig, x, positions, dtype,
+              remat: str = "dots", enc=None, causal=True):
+    """Run the decoder segment plan over x.  Returns (x, total_aux)."""
+    plan = build_plan(cfg) if not cfg.is_encdec else (
+        Segment("dec", cfg.n_layers, 0),)
+    windows = jnp.asarray(layer_windows(cfg)) if not cfg.is_encdec else (
+        jnp.zeros(cfg.n_layers, jnp.int32))
+    thetas = jnp.asarray(layer_thetas(cfg)) if not cfg.is_encdec else (
+        jnp.zeros(cfg.n_layers, jnp.float32))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for seg, seg_p in zip(plan, params["segments"]):
+        if seg.kind == "shared":
+            x, aux = apply_block(params["shared_block"], x, "shared", cfg,
+                                 positions, jnp.int32(0),
+                                 jnp.float32(cfg.rope_theta), dtype,
+                                 causal=causal)
+            aux_total = aux_total + aux
+            continue
+
+        w_seg = windows[seg.start:seg.start + seg.count]
+        t_seg = thetas[seg.start:seg.start + seg.count]
+
+        def body(carry, xs, kind=seg.kind):
+            xc, auxc = carry
+            p_l, w_l, t_l = xs
+            xc, a = apply_block(p_l, xc, kind, cfg, positions, w_l, t_l,
+                                dtype, enc=enc, causal=causal)
+            return (xc, auxc + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _remat(body, remat), (x, aux_total), (seg_p, w_seg, t_seg),
+            unroll=seg.count if scan_unroll() else 1)
+    return x, aux_total
+
+
+def run_encoder(params, cfg: ModelConfig, frames, dtype, remat="dots"):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    b, s, _ = frames.shape
+    x = frames.astype(dtype) + L.sinusoidal_positions(
+        s, cfg.d_model)[None].astype(dtype)
+    positions = jnp.arange(s)
+
+    def body(carry, p_l):
+        xc, _ = carry
+        xc, a = apply_block(p_l, xc, "enc", cfg, positions,
+                            jnp.int32(0), jnp.float32(0.0), dtype,
+                            causal=False)
+        return (xc, a), None
+
+    (x, _), _ = jax.lax.scan(_remat(body, remat),
+                             (x, jnp.zeros((), jnp.float32)),
+                             params["enc_segments"][0],
+                             unroll=cfg.enc_layers if scan_unroll() else 1)
+    return L.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+# ----------------------------------------------------------------- training
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                  dtype):
+    """Token (+ frontend) embedding.  Returns (x, positions, loss_offset)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, dtype)
+    offset = 0
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+        offset = batch["patches"].shape[1]
+    if cfg.rope_theta == 0 and not cfg.is_encdec:
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(dtype)
+    if cfg.is_encdec:
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(dtype)
+    positions = jnp.arange(x.shape[1])
+    return x, positions, offset
+
+
+def logits_fn(params, cfg: ModelConfig, x, dtype):
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    w = params.get("unembed")
+    return L.unembed(params["embed"], x, dtype, w)
+
+
+def forward_train(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+                  dtype=jnp.bfloat16, remat: str = "dots"):
+    """Returns (loss, metrics).  batch: tokens, labels [, patches | frames]."""
+    enc = None
+    if cfg.is_encdec:
+        enc = run_encoder(params, cfg, batch["frames"], dtype, remat)
+    x, positions, offset = _embed_inputs(params, cfg, batch, dtype)
+    x, aux = run_stack(params, cfg, x, positions, dtype, remat=remat, enc=enc)
+    if offset:
+        x = x[:, offset:]
+    logits = logits_fn(params, cfg, x, dtype)
+    loss = L.cross_entropy(logits, batch["labels"])
+    total = loss + aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def forward_logits(params, cfg: ModelConfig, batch, *, dtype=jnp.bfloat16,
+                   remat: str = "none"):
+    enc = None
+    if cfg.is_encdec:
+        enc = run_encoder(params, cfg, batch["frames"], dtype, remat)
+    x, positions, offset = _embed_inputs(params, cfg, batch, dtype)
+    x, _ = run_stack(params, cfg, x, positions, dtype, remat=remat, enc=enc)
+    if offset:
+        x = x[:, offset:]
+    return logits_fn(params, cfg, x, dtype)

@@ -1,0 +1,116 @@
+"""AdamW + LR schedules in pure JAX (no optax dependency).
+
+Mixed precision: when ``master_in_opt`` is set, the optimizer keeps f32
+master weights in its state and the model params may live in bf16 — the
+update runs in f32 and re-casts.  Moments are always f32.
+
+Sharding: optimizer state mirrors the parameter PartitionSpecs; with
+``zero1`` an *additional* dp-axis shard is applied to the moments/master
+(ZeRO-1), which `repro.launch.dryrun` uses as a §Perf memory lever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# -------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return jnp.where(step < warmup, warm, base_lr * (1 - 0.9 * t))
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable = cosine_schedule(3e-4, 100, 10_000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_in_opt: bool = False   # keep f32 master copies (bf16 params)
+
+
+def init_opt_state(params: Params, cfg: AdamWConfig) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    state = {"mu": zeros,
+             "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.master_in_opt:
+        state["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params: Params, grads: Params, state: Dict[str, Any],
+                 cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = cfg.lr(step)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    def moments(g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        return mu, nu
+
+    flat_g = jax.tree_util.tree_leaves(grads)
+    tdef = jax.tree_util.tree_structure(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    new_mu, new_nu = [], []
+    for g, mu, nu in zip(flat_g, flat_mu, flat_nu):
+        m, n = moments(g, mu, nu)
+        new_mu.append(m)
+        new_nu.append(n)
+    mu_t = jax.tree_util.tree_unflatten(tdef, new_mu)
+    nu_t = jax.tree_util.tree_unflatten(tdef, new_nu)
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    ref = state.get("master", params)
+
+    def upd(p, mu, nu):
+        p32 = p.astype(jnp.float32)
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p32
+        return p32 - lr * u
+
+    new_master = jax.tree_util.tree_map(upd, ref, mu_t, nu_t)
+    new_params = jax.tree_util.tree_map(
+        lambda m, p: m.astype(p.dtype), new_master, params)
+    new_state = {"mu": mu_t, "nu": nu_t, "step": step}
+    if cfg.master_in_opt:
+        new_state["master"] = new_master
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, stats

@@ -1,0 +1,104 @@
+"""Train-step factory: loss/grad -> (compressed) gradients -> AdamW.
+
+Features:
+  * microbatch gradient accumulation (``accum_steps``) via ``lax.scan``;
+  * activation-checkpoint policy (none / dots / full) threaded to the model;
+  * optional int8 error-feedback gradient compression
+    (:mod:`repro.elastic.compression`) applied before the (XLA-inserted)
+    data-parallel all-reduce;
+  * bf16-param / f32-master mixed precision via the optimizer config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "dots"           # none | dots | full
+    accum_steps: int = 1
+    compress_grads: bool = False  # int8 error-feedback DP compression
+    opt: AdamWConfig = AdamWConfig()
+
+
+def loss_fn(params, cfg: ModelConfig, batch, tc: TrainConfig):
+    loss, metrics = T.forward_train(params, cfg, batch,
+                                    dtype=tc.compute_dtype, remat=tc.remat)
+    return loss, metrics
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def grads_of(params, cfg: ModelConfig, batch, tc: TrainConfig):
+    """Mean gradients over ``tc.accum_steps`` microbatches."""
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+    if tc.accum_steps <= 1:
+        (loss, metrics), grads = gfn(params, cfg, batch, tc)
+        return loss, metrics, grads
+
+    micro = _split_microbatches(batch, tc.accum_steps)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, _), grads = gfn(params, cfg, mb, tc)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), micro)
+    inv = 1.0 / tc.accum_steps
+    grads = jax.tree_util.tree_map(lambda g: g * inv, gsum)
+    loss = lsum * inv
+    return loss, {"ce_loss": loss, "aux_loss": jnp.zeros(())}, grads
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns ``train_step(state, batch) -> (state, stats)``.
+
+    ``state`` = {"params", "opt", "ef"(optional error-feedback residual)}.
+    """
+    if tc.compress_grads:
+        from repro.elastic.compression import (compress_decompress,
+                                               init_residuals)
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, metrics, grads = grads_of(params, cfg, batch, tc)
+        if tc.compress_grads:
+            grads, ef = compress_decompress(grads, state["ef"])
+        new_params, new_opt, stats = adamw_update(params, grads,
+                                                  state["opt"], tc.opt)
+        out = {"params": new_params, "opt": new_opt}
+        if tc.compress_grads:
+            out["ef"] = ef
+        stats = {**stats, "loss": loss, **metrics}
+        return out, stats
+
+    return train_step
+
+
+def init_train_state(rng, cfg: ModelConfig, tc: TrainConfig):
+    params = T.init_params(rng, cfg, param_dtype=tc.param_dtype)
+    state = {"params": params, "opt": init_opt_state(params, tc.opt)}
+    if tc.compress_grads:
+        from repro.elastic.compression import init_residuals
+        state["ef"] = init_residuals(params)
+    return state

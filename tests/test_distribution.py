@@ -1,0 +1,118 @@
+"""Distribution-layer correctness.
+
+The heavy check — sharded (2-D mesh, shard_map MoE, constrained attention)
+forward == single-device forward — needs multiple XLA host devices, which
+must be configured before jax initializes, so it runs in a subprocess.
+Spec-construction logic is tested in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.models import sharding as SH
+
+
+_EQUIV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["REPRO_ACT_PIN"] = "1"   # exercise the constrained path
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models import sharding as SH
+    from repro.train.data import batch_for
+
+    arch = "%ARCH%"
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=64.0)
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             batch_for(cfg, 16, 8, step=1).items()}
+
+    # single device reference
+    ref = T.forward_logits(params, cfg, batch, dtype=jnp.float32)
+
+    # 4x2 (data, model) mesh
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    psh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), SH.param_specs(params, mesh))
+    bsh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P("data")), batch)
+    with mesh:
+        fn = jax.jit(lambda p, b: T.forward_logits(p, cfg, b,
+                                                   dtype=jnp.float32),
+                     in_shardings=(psh, bsh))
+        out = fn(params, batch)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 5e-3, f"sharded != single-device: {err}"
+    print(f"OK {arch} err={err:.2e}")
+""")
+
+
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "glm4-9b", "mamba2-1.3b",
+                                  "zamba2-2.7b"])
+def test_sharded_forward_matches_single_device(arch):
+    """8-device SPMD forward == single-device forward (subprocess)."""
+    script = _EQUIV_SCRIPT.replace("%ARCH%", arch)
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert f"OK {arch}" in res.stdout
+
+
+# ------------------------------------------------------------ spec logic
+def test_param_specs_divisibility_rules():
+    """Indivisible dims stay replicated; divisible ones shard over model."""
+    cfg = get_config("qwen2-72b")
+    mesh_like = jax.sharding.Mesh(
+        np.array(jax.devices() * 1).reshape(1, 1), ("data", "model"))
+    # fake a 16-way model axis via an abstract check on the rule fn
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    import types
+    leaf = types.SimpleNamespace(shape=(8192, 29568))
+    spec = SH.spec_for_param(
+        (jax.tree_util.DictKey("mlp"), jax.tree_util.DictKey("w1")),
+        leaf, FakeMesh())
+    assert spec == P(None, "model")          # 29568 % 16 == 0
+    leaf2 = types.SimpleNamespace(shape=(8192, 1030))
+    spec2 = SH.spec_for_param(
+        (jax.tree_util.DictKey("mlp"), jax.tree_util.DictKey("w1")),
+        leaf2, FakeMesh())
+    assert spec2 == P(None, None)            # 1030 % 16 != 0 -> replicated
+
+
+def test_cache_specs_mla_latent_rule():
+    """MLA latent cache shards the latent dim, never the sequence (B1)."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    cache = {"segments": [{
+        "ckv": jax.ShapeDtypeStruct((60, 128, 4096, 512), jnp.bfloat16),
+        "krope": jax.ShapeDtypeStruct((60, 128, 4096, 64), jnp.bfloat16),
+    }]}
+    specs = SH.cache_specs(cache, FakeMesh())
+    ckv_spec = specs["segments"][0]["ckv"]
+    assert ckv_spec[1] == "data" and ckv_spec[3] == "model"
+    assert ckv_spec[2] is None, "sequence dim must NOT shard (B1)"

@@ -1,0 +1,163 @@
+"""Behavioural tests for the reference DES (paper §2.1 semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AVG, EASY, KEEPPREF, MIN, PREF, STRATEGIES, Cluster,
+                        Simulator, Window, Workload, run_metrics, simulate,
+                        transform_rigid_to_malleable)
+
+TINY = Cluster("t", nodes=10, tick=1.0)
+
+
+def wl(submit, runtime, nodes):
+    return Workload.rigid(submit=submit, runtime=runtime, nodes_req=nodes)
+
+
+# ---------------------------------------------------------------- rigid EASY
+def test_fcfs_order_respected():
+    w = wl([0, 1, 2], [100, 100, 100], [6, 6, 6])
+    r = simulate(w, TINY, EASY)
+    assert r.start[0] < r.start[1] < r.start[2]
+
+
+def test_backfill_small_job_skips_blocked_head():
+    # head (8 nodes) blocked by running j0 (6 nodes, 100s); j2 (2 nodes, 10s)
+    # finishes before the head's reservation -> backfills immediately.
+    w = wl([0, 1, 1], [100, 50, 10], [6, 8, 2])
+    r = simulate(w, TINY, EASY)
+    assert r.start[2] < r.start[1], "small job should backfill"
+    assert r.start[2] <= 2.0
+
+
+def test_backfill_never_delays_head():
+    # j2 runtime too long to finish before head's reservation and too big
+    # for the spare nodes -> must NOT start before the head.
+    w = wl([0, 1, 1], [100, 50, 500], [6, 8, 4])
+    r = simulate(w, TINY, EASY)
+    assert r.start[1] <= 101.0  # head starts right when j0 ends
+    assert r.start[2] >= r.start[1]
+
+
+def test_walltime_used_for_reservation_not_completion():
+    # actual completion uses runtime (not walltime)
+    w = Workload.rigid(submit=[0], runtime=[100], nodes_req=[4],
+                       walltime=[1000])
+    r = simulate(w, TINY, EASY)
+    assert abs(r.end[0] - 100.0) < 1.0
+
+
+def test_rigid_jobs_never_resized():
+    w = wl([0, 0, 5], [100, 80, 60], [4, 4, 4])
+    r = simulate(w, TINY, EASY)
+    assert np.all(r.expand_ops == 0) and np.all(r.shrink_ops == 0)
+
+
+# ------------------------------------------------------------- malleability
+@pytest.fixture
+def mall_wl():
+    w = wl([0, 0, 0, 30], [120, 120, 60, 40], [4, 4, 4, 8])
+    return transform_rigid_to_malleable(w, 1.0, seed=1, cluster_nodes=10)
+
+
+@pytest.mark.parametrize("name", ["min", "pref", "avg", "keeppref"])
+def test_alloc_within_bounds(mall_wl, name):
+    r = simulate(mall_wl, TINY, STRATEGIES[name])
+    assert np.all(np.isfinite(r.end)), "every job completes"
+
+
+@pytest.mark.parametrize("name", ["min", "pref", "avg"])
+def test_malleable_reduces_turnaround(name):
+    rng = np.random.default_rng(0)
+    n = 60
+    w = wl(np.sort(rng.uniform(0, 600, n)),
+           rng.uniform(50, 400, n),
+           rng.choice([1, 2, 4, 8], n))
+    wm = transform_rigid_to_malleable(w, 1.0, seed=0, cluster_nodes=10)
+    base = simulate(w, TINY, EASY)
+    mall = simulate(wm, TINY, STRATEGIES[name])
+    win = Window(0.0, float(np.max(w.submit)))
+    mb = run_metrics(base, w, TINY, win)
+    mm = run_metrics(mall, wm, TINY, win)
+    assert mm["turnaround_mean"] < mb["turnaround_mean"], (
+        f"{name}: malleability should cut turnaround "
+        f"({mm['turnaround_mean']:.0f} vs {mb['turnaround_mean']:.0f})")
+
+
+def test_keeppref_waits_for_preferred(mall_wl):
+    # KEEPPREF never starts a job below its preferred allocation
+    r = simulate(mall_wl, TINY, KEEPPREF)
+    assert np.all(np.isfinite(r.end))
+
+
+def test_nodes_never_oversubscribed():
+    rng = np.random.default_rng(3)
+    n = 40
+    w = wl(np.sort(rng.uniform(0, 400, n)), rng.uniform(30, 300, n),
+           rng.choice([1, 2, 4], n))
+    wm = transform_rigid_to_malleable(w, 0.7, seed=2, cluster_nodes=10)
+    for name, strat in STRATEGIES.items():
+        r = simulate(wm, TINY, strat)
+        assert int(np.max(r.util_nodes)) <= TINY.nodes, name
+
+
+def test_tick_equivalence():
+    """Event-quantized scheduling == dense per-tick scheduling (DESIGN §2)."""
+    rng = np.random.default_rng(7)
+    n = 30
+    w = wl(np.sort(rng.uniform(0, 300, n)), rng.uniform(20, 200, n),
+           rng.choice([1, 2, 4, 8], n))
+    wm = transform_rigid_to_malleable(w, 0.6, seed=1, cluster_nodes=10)
+    for name, strat in STRATEGIES.items():
+        fast = Simulator(wm, TINY, strat, dense_ticks=False).run()
+        dense = Simulator(wm, TINY, strat, dense_ticks=True).run()
+        np.testing.assert_allclose(fast.start, dense.start, atol=1e-6,
+                                   err_msg=f"{name} starts diverge")
+        np.testing.assert_allclose(fast.end, dense.end, atol=1e-3,
+                                   err_msg=f"{name} ends diverge")
+
+
+def test_tick_quantizes_starts():
+    cl = Cluster("q", nodes=10, tick=10.0)
+    w = wl([3.0, 17.0], [50, 50], [4, 4])
+    r = simulate(w, cl, EASY)
+    assert r.start[0] == 10.0 and r.start[1] == 20.0
+
+
+# --------------------------------------------------------------- properties
+@given(
+    n=st.integers(2, 25),
+    seed=st.integers(0, 10_000),
+    prop=st.sampled_from([0.0, 0.4, 1.0]),
+    name=st.sampled_from(list(STRATEGIES)),
+)
+@settings(max_examples=40, deadline=None)
+def test_simulation_invariants(n, seed, prop, name):
+    rng = np.random.default_rng(seed)
+    w = wl(np.sort(rng.uniform(0, 200, n)), rng.uniform(10, 150, n),
+           rng.choice([1, 2, 4, 8], n))
+    wm = transform_rigid_to_malleable(w, prop, seed=seed, cluster_nodes=10)
+    r = simulate(wm, TINY, STRATEGIES[name])
+    # 1. every job runs and completes
+    assert np.all(np.isfinite(r.start)) and np.all(np.isfinite(r.end))
+    # 2. causality: submit <= start < end
+    assert np.all(r.start >= wm.submit - 1e-6)
+    assert np.all(r.end > r.start)
+    # 3. capacity never exceeded
+    assert int(np.max(r.util_nodes)) <= TINY.nodes
+    # 4. rigid jobs keep their exact runtime
+    rigid = ~wm.malleable
+    np.testing.assert_allclose((r.end - r.start)[rigid], wm.runtime[rigid],
+                               rtol=1e-6)
+    # 5. malleable runtimes bounded by min/max-allocation extremes
+    mal = wm.malleable
+    if np.any(mal):
+        from repro.core import amdahl_speedup
+        s_ref = amdahl_speedup(wm.nodes_req[mal], wm.pfrac[mal])
+        t_fast = wm.runtime[mal] * s_ref / amdahl_speedup(wm.max_nodes[mal],
+                                                          wm.pfrac[mal])
+        t_slow = wm.runtime[mal] * s_ref / amdahl_speedup(wm.min_nodes[mal],
+                                                          wm.pfrac[mal])
+        span = (r.end - r.start)[mal]
+        assert np.all(span >= t_fast - 1e-3)
+        assert np.all(span <= t_slow + 2 * TINY.tick + 1e-3)

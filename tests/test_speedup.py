@@ -1,0 +1,102 @@
+"""Tests for the speedup model and rigid->malleable transform (paper §2.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TabulatedSpeedup, TransformConfig, Workload,
+                        amdahl_efficiency, amdahl_speedup,
+                        nodes_at_efficiency, pfrac_for_reference_efficiency,
+                        transform_rigid_to_malleable)
+
+
+def test_amdahl_monotone():
+    n = np.arange(1, 512)
+    s = amdahl_speedup(n, 0.95)
+    assert np.all(np.diff(s) > 0), "speedup increases with nodes"
+    e = amdahl_efficiency(n, 0.95)
+    assert np.all(np.diff(e) < 1e-12), "efficiency decreases with nodes"
+    assert abs(s[0] - 1.0) < 1e-12
+
+
+@given(st.integers(2, 2048), st.floats(0.55, 0.95))
+@settings(max_examples=100, deadline=None)
+def test_pfrac_calibration(n_ref, e_ref):
+    p = pfrac_for_reference_efficiency(n_ref, e_ref)
+    e = amdahl_efficiency(n_ref, p)
+    assert abs(float(e) - e_ref) < 1e-6
+
+
+@given(st.floats(0.3, 0.99), st.floats(0.4, 0.9))
+@settings(max_examples=100, deadline=None)
+def test_nodes_at_efficiency_is_largest(p, e):
+    n = int(nodes_at_efficiency(p, e))
+    assert amdahl_efficiency(n, p) >= e - 1e-9
+    assert amdahl_efficiency(n + 1, p) < e + 1e-6 or n >= 1
+
+
+@given(st.integers(0, 1000), st.sampled_from([0.0, 0.2, 0.5, 1.0]))
+@settings(max_examples=50, deadline=None)
+def test_transform_invariants(seed, prop):
+    rng = np.random.default_rng(seed)
+    n = 50
+    w = Workload.rigid(
+        submit=np.sort(rng.uniform(0, 1000, n)),
+        runtime=rng.uniform(60, 4000, n),
+        nodes_req=rng.choice([1, 2, 4, 8, 64, 256], n),
+    )
+    wm = transform_rigid_to_malleable(w, prop, seed=seed, cluster_nodes=4392)
+    wm.validate(4392)
+    assert int(wm.malleable.sum()) == round(prop * n)
+    m = wm.malleable
+    assert np.all(wm.min_nodes[m] <= wm.nodes_req[m])
+    assert np.all(wm.max_nodes[m] >= wm.nodes_req[m] // 2)
+    cfg = TransformConfig()
+    assert np.all(wm.max_nodes[m] <= cfg.max_cap_factor * wm.nodes_req[m])
+    assert np.all(wm.pref_nodes[m] <= cfg.pref_cap_factor * wm.nodes_req[m])
+    # rigid jobs untouched
+    r = ~m
+    assert np.all(wm.min_nodes[r] == wm.nodes_req[r])
+    assert np.all(wm.max_nodes[r] == wm.nodes_req[r])
+
+
+def test_same_seed_same_selection():
+    w = Workload.rigid(submit=np.arange(20.0), runtime=np.full(20, 100.0),
+                       nodes_req=np.full(20, 4))
+    a = transform_rigid_to_malleable(w, 0.5, seed=3, cluster_nodes=100)
+    b = transform_rigid_to_malleable(w, 0.5, seed=3, cluster_nodes=100)
+    c = transform_rigid_to_malleable(w, 0.5, seed=4, cluster_nodes=100)
+    np.testing.assert_array_equal(a.malleable, b.malleable)
+    assert not np.array_equal(a.malleable, c.malleable)
+
+
+def test_tabulated_speedup_roofline():
+    # compute-bound at small n, collective-bound at large n
+    nodes = [1, 2, 4, 8, 16]
+    coll = [0.0, 0.5, 0.5, 0.5, 0.5]
+    t = TabulatedSpeedup.from_roofline(nodes, compute_s=8.0, memory_s=1.0,
+                                       collective_s_per_node=coll)
+    s = t(np.array(nodes))
+    assert s[0] == 1.0
+    assert abs(s[1] - 2.0) < 1e-9      # 8/2=4s vs 8s
+    assert abs(s[-1] - 8.0 / 0.5) < 1e-9  # collective floor at 0.5s
+    # interpolation stays monotone
+    q = t(np.array([3, 5, 12]))
+    assert np.all(np.diff(t(np.arange(1, 17))) >= -1e-9)
+    del q
+
+
+def test_workload_json_roundtrip():
+    w = Workload.rigid(submit=[0.0, 5.0], runtime=[100.0, 50.0],
+                       nodes_req=[4, 2])
+    wm = transform_rigid_to_malleable(w, 1.0, seed=0, cluster_nodes=64)
+    w2 = Workload.from_json(wm.to_json())
+    np.testing.assert_allclose(w2.submit, wm.submit)
+    np.testing.assert_allclose(w2.pfrac, wm.pfrac)
+    np.testing.assert_array_equal(w2.pref_nodes, wm.pref_nodes)
+    np.testing.assert_array_equal(w2.malleable, wm.malleable)
+
+
+def test_invalid_proportion_rejected():
+    w = Workload.rigid(submit=[0.0], runtime=[10.0], nodes_req=[1])
+    with pytest.raises(ValueError):
+        transform_rigid_to_malleable(w, 1.5, seed=0, cluster_nodes=4)

@@ -27,6 +27,9 @@ def main(argv=None) -> int:
                     help="paper-scale: --scale 1.0 --seeds 10")
     ap.add_argument("--workloads", nargs="*",
                     default=["haswell", "knl", "eagle", "theta"])
+    ap.add_argument("--engine", choices=["des", "jax"], default="des",
+                    help="sweep engine: looped numpy DES or the batched "
+                         "device-resident JAX engine (repro.sweep)")
     ap.add_argument("--skip-sweeps", action="store_true")
     ap.add_argument("--no-reuse", action="store_true",
                     help="recompute sweeps even if artifacts exist")
@@ -63,13 +66,31 @@ def main(argv=None) -> int:
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
         for name in args.workloads:
             cache = ARTIFACTS / f"sweep-{name}.json"
+            cached_results = None
             if cache.exists() and not args.no_reuse:
-                results = json.loads(cache.read_text())["results"]
+                cached_results = json.loads(cache.read_text())["results"]
+                cached_engine = cached_results.get("_meta", {}).get(
+                    "engine", "des")
+                if cached_engine != args.engine:
+                    print(f"[sweep:{name}] cached artifact is from the "
+                          f"{cached_engine} engine; recomputing with "
+                          f"{args.engine}")
+                    cached_results = None
+            if cached_results is not None:
+                results = cached_results
                 print(f"[sweep:{name}] reusing {cache}")
             elif args.only_cached:
                 print(f"[sweep:{name}] no cached sweep artifact; skipping "
                       f"(run `python -m benchmarks.sweep --workload {name}`)")
                 continue
+            elif args.engine == "jax":
+                from repro.sweep import runner as jax_runner
+                jax_runner.enable_compilation_cache(ARTIFACTS / "xla_cache")
+                results = jax_runner.sweep_workload_jax(
+                    name, scale=args.scale, seeds=args.seeds,
+                    # --no-reuse means recompute: bypass the cell cache too
+                    cache_dir=None if args.no_reuse
+                    else str(ARTIFACTS / "sweep_cache"))
             else:
                 results = sweep.sweep_workload(name, scale=args.scale,
                                                seeds=args.seeds)

@@ -4,6 +4,17 @@ For one workload: proportions 0..100% x strategies x seeds ->
 per-(strategy, proportion) aggregated metrics with IQR, plus the
 improvement-vs-rigid summary the paper's abstract quotes.
 
+Two engines evaluate the same grid:
+
+  * ``--engine des`` (default): the reference numpy DES, one Python-level
+    simulation per (strategy, proportion, seed) cell;
+  * ``--engine jax``: the batched device-resident engine
+    (:mod:`repro.sweep`), which runs the whole grid as fixed-shape lanes on
+    one device, caches per-cell results on disk, and can ``--crosscheck``
+    sampled cells against the DES.
+
+``--compare-engines`` runs both on the same grid and reports wall-clock.
+
 CLI:  PYTHONPATH=src python -m benchmarks.sweep --workload haswell \
           --scale 0.2 --seeds 3 --out artifacts/sweep-haswell.json
 """
@@ -20,9 +31,11 @@ import numpy as np
 from repro.core import (CLUSTERS, Window, aggregate_seeds, get_strategy,
                         improvement, run_metrics, simulate, traces)
 from repro.core.speedup import transform_rigid_to_malleable
+from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
+                                   SWEEP_PROPORTIONS)
 
-PROPORTIONS = (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)
-MALLEABLE_STRATEGIES = ("min", "pref", "avg", "keeppref")
+PROPORTIONS = SWEEP_PROPORTIONS
+MALLEABLE_STRATEGIES = MALLEABLE_STRATEGY_NAMES
 
 
 def sweep_workload(name: str, *, scale: float = 0.2, seeds: int = 3,
@@ -110,6 +123,61 @@ def best_improvements(results: Dict) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def compare_engines(name: str, *, scale: float, seeds: int,
+                    proportions, crosscheck: int = 4,
+                    cache_dir: Optional[str] = None) -> Dict:
+    """Wall-clock comparison: looped DES vs. the batched JAX engine.
+
+    The JAX engine is timed twice — cold (first call in the process, XLA
+    compilation included) and steady-state (compilations reused, per-cell
+    result cache disabled) — because compilation is a one-time cost that
+    the persistent XLA cache carries across processes while the simulation
+    cost recurs with every new grid.
+    """
+    from repro.sweep import runner as jax_runner
+
+    t0 = time.monotonic()
+    sweep_workload(name, scale=scale, seeds=seeds,
+                   proportions=proportions, verbose=False)
+    des_wall = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    jax_results = jax_runner.sweep_workload_jax(
+        name, scale=scale, seeds=seeds, proportions=proportions,
+        crosscheck=crosscheck, cache_dir=cache_dir, verbose=False)
+    # the crosscheck's DES re-runs are reference work, not engine time
+    jax_cold_wall = time.monotonic() - t0 - \
+        jax_results.get("_crosscheck", {}).get("seconds", 0.0)
+
+    t0 = time.monotonic()
+    jax_runner.sweep_workload_jax(
+        name, scale=scale, seeds=seeds, proportions=proportions,
+        cache_dir=None, verbose=False)
+    jax_warm_wall = time.monotonic() - t0
+
+    report = {
+        "grid_cells": 1 + len(MALLEABLE_STRATEGIES) *
+        sum(1 for p in proportions if p > 0) * seeds,
+        "des_wall_s": des_wall,
+        "jax_wall_cold_s": jax_cold_wall,
+        "jax_wall_steady_s": jax_warm_wall,
+        "speedup_cold": des_wall / max(jax_cold_wall, 1e-9),
+        "speedup_steady": des_wall / max(jax_warm_wall, 1e-9),
+        "crosscheck_ok": jax_results.get("_crosscheck", {}).get(
+            "all_within_tolerance"),
+    }
+    print(f"[compare:{name}] {report['grid_cells']}-cell grid at "
+          f"scale={scale} seeds={seeds}")
+    print(f"[compare:{name}] looped DES      {des_wall:8.1f}s")
+    print(f"[compare:{name}] batched JAX     {jax_cold_wall:8.1f}s cold "
+          f"(incl. XLA compile)  -> {report['speedup_cold']:.1f}x")
+    print(f"[compare:{name}] batched JAX     {jax_warm_wall:8.1f}s steady "
+          f"state               -> {report['speedup_steady']:.1f}x")
+    print(f"[compare:{name}] crosscheck within tolerance: "
+          f"{report['crosscheck_ok']}")
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", required=True,
@@ -118,11 +186,47 @@ def main(argv=None):
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--proportions", type=float, nargs="*",
                     default=list(PROPORTIONS))
+    ap.add_argument("--engine", choices=["des", "jax"], default="des",
+                    help="des: looped numpy reference; jax: batched "
+                         "device-resident engine (repro.sweep)")
+    ap.add_argument("--crosscheck", type=int, default=0,
+                    help="[jax] re-run N sampled cells through the DES")
+    ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
+                    help="[jax] per-cell result cache ('' disables)")
+    ap.add_argument("--compare-engines", action="store_true",
+                    help="time the same grid on both engines and report "
+                         "the wall-clock ratio; the per-cell result cache "
+                         "is disabled so timings are real, and 4 cells are "
+                         "crosschecked unless --crosscheck overrides")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
-    results = sweep_workload(args.workload, scale=args.scale,
-                             seeds=args.seeds,
-                             proportions=tuple(args.proportions))
+
+    if args.compare_engines:
+        report = compare_engines(args.workload, scale=args.scale,
+                                 seeds=args.seeds,
+                                 proportions=tuple(args.proportions),
+                                 crosscheck=args.crosscheck or 4,
+                                 cache_dir=None)
+        if args.out:
+            path = pathlib.Path(args.out)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(report, indent=1, default=float))
+            print(f"[compare:{args.workload}] wrote {path}")
+        return
+
+    if args.engine == "jax":
+        from repro.sweep import runner as jax_runner
+        if args.cache_dir:
+            jax_runner.enable_compilation_cache(
+                pathlib.Path(args.cache_dir).parent / "xla_cache")
+        results = jax_runner.sweep_workload_jax(
+            args.workload, scale=args.scale, seeds=args.seeds,
+            proportions=tuple(args.proportions),
+            crosscheck=args.crosscheck, cache_dir=args.cache_dir or None)
+    else:
+        results = sweep_workload(args.workload, scale=args.scale,
+                                 seeds=args.seeds,
+                                 proportions=tuple(args.proportions))
     summary = best_improvements(results)
     print(f"\n[sweep:{args.workload}] best-vs-rigid (100% malleable):")
     for metric, r in summary.items():

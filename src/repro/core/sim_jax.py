@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,13 +61,18 @@ class JobArrays(NamedTuple):
             submit=jnp.asarray(w.submit, jnp.float32),
             runtime=jnp.asarray(w.runtime, jnp.float32),
             nodes_req=jnp.asarray(w.nodes_req, jnp.int32),
-            malleable=jnp.asarray(w.malleable),
+            malleable=jnp.asarray(w.malleable, jnp.bool_),
             min_nodes=jnp.asarray(w.min_nodes, jnp.int32),
             max_nodes=jnp.asarray(w.max_nodes, jnp.int32),
             pref_nodes=jnp.asarray(w.pref_nodes, jnp.int32),
             pfrac=jnp.asarray(w.pfrac, jnp.float32),
-            rank=jnp.asarray(rank),
+            rank=jnp.asarray(rank, jnp.int32),
         )
+
+    @staticmethod
+    def stack(variants: Sequence["JobArrays"]) -> "JobArrays":
+        """Stack same-length variants into batched (B, n) arrays."""
+        return JobArrays(*[jnp.stack(a) for a in zip(*variants)])
 
 
 class SimState(NamedTuple):
@@ -121,11 +126,16 @@ def _fcfs_prefix_start(state, alloc, start_t, want, floor, rank, free, t):
     return state, alloc, start_t
 
 
-def _smallest_fill_start(state, alloc, start_t, want, floor, free, t):
-    """Backfill-lite: smallest-first fill of remaining queued jobs."""
+def _smallest_fill_start(state, alloc, start_t, want, floor, rank, free, t):
+    """Backfill-lite: smallest-first fill of remaining queued jobs.
+
+    Sorted by the composite key (floor, rank) so equal-size queued jobs
+    backfill in FCFS order.
+    """
     queued = state == QUEUED
-    key = jnp.where(queued, floor, jnp.int32(jnp.iinfo(jnp.int32).max))
-    order = jnp.argsort(key)  # stable: ties keep submit order via prior sort? no — acceptable
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    order = jnp.lexsort((jnp.where(queued, rank, big),
+                         jnp.where(queued, floor, big)))
     f_sorted = jnp.where(queued[order], floor[order], 0)
     cum = jnp.cumsum(f_sorted)
     start_sorted = queued[order] & (cum <= free)
@@ -190,7 +200,7 @@ def simulate_scan(
             state, alloc, st.start_t, want, floor, jobs.rank, free, t)
         free = capacity - jnp.sum(jnp.where(state == RUNNING, alloc, 0))
         state, alloc, start_t = _smallest_fill_start(
-            state, alloc, start_t, want, floor, free, t)
+            state, alloc, start_t, want, floor, jobs.rank, free, t)
 
         if strategy.malleable:
             # 4b. Step 2: one shrink round for the blocked head
@@ -262,3 +272,26 @@ def simulate_jax(workload: Workload, capacity: int, tick: float,
     """Convenience wrapper: Workload -> device arrays -> scan."""
     return simulate_scan(JobArrays.from_workload(workload), strategy,
                          int(capacity), float(tick), int(n_ticks))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_sim(strategy: Strategy, capacity: int, tick: float,
+                 n_ticks: int):
+    """One jitted vmap of :func:`simulate_scan` per static configuration."""
+    return jax.jit(jax.vmap(
+        lambda jobs: simulate_scan(jobs, strategy, capacity, tick, n_ticks)))
+
+
+def simulate_scan_batch(jobs: JobArrays, strategy: Strategy, capacity: int,
+                        tick: float, n_ticks: int
+                        ) -> Tuple[SimState, SimTrace]:
+    """Batched entry point: ``jobs`` fields are (B, n); one lane per variant.
+
+    The strategy axis stays static (one jit per strategy); proportion/seed
+    variants ride the leading batch axis.  For the high-throughput
+    event-stepped engine use :mod:`repro.sweep.batch` instead — this wrapper
+    runs the dense per-tick scan and is intended for moderate grids and
+    property tests.
+    """
+    return _batched_sim(strategy, int(capacity), float(tick),
+                        int(n_ticks))(jobs)

@@ -80,6 +80,39 @@ class TransformConfig:
     max_cap_factor: int = 4           # max  <= max_cap_factor * n_req
 
 
+def _malleable_ranges(nodes_req, e_ref, cluster_nodes, config):
+    """Per-job (pfrac, min, pref, max) from sampled reference efficiencies."""
+    p = pfrac_for_reference_efficiency(nodes_req, e_ref)
+
+    pref = nodes_at_efficiency(p, config.e_pref)
+    mx = nodes_at_efficiency(p, config.e_min)
+    mn = np.maximum(1, nodes_req // config.min_divisor)
+
+    pref = np.minimum(pref, config.pref_cap_factor * nodes_req)
+    mx = np.minimum(mx, config.max_cap_factor * nodes_req)
+    mx = np.minimum(mx, cluster_nodes)
+    pref = np.minimum(pref, mx)
+    # keep ordering min <= pref <= max; never let pref drop below the rigid
+    # request's half (jobs stay near their observed scale).
+    pref = np.maximum(pref, mn)
+    mx = np.maximum(mx, pref)
+    mn = np.minimum(mn, pref)
+    return p, mn, pref, mx
+
+
+def _seed_draws(workload: Workload, seed: int, config: TransformConfig):
+    """The per-seed random draws: job permutation + reference efficiencies.
+
+    The permutation is consumed *before* ``e_ref`` so selections nest across
+    proportions at a fixed seed (the paper reuses the workload; only the
+    malleable subset grows with the proportion).
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(workload.n_jobs)
+    e_ref = rng.uniform(*config.e_ref_range, size=workload.n_jobs)
+    return perm, e_ref
+
+
 def transform_rigid_to_malleable(
     workload: Workload,
     proportion: float,
@@ -97,26 +130,12 @@ def transform_rigid_to_malleable(
         raise ValueError(f"proportion must be in [0,1], got {proportion}")
     w = workload.copy()
     n = w.n_jobs
-    rng = np.random.default_rng(seed)
+    perm, e_ref = _seed_draws(w, seed, config)
     k = int(round(proportion * n))
-    chosen = rng.permutation(n)[:k]
+    chosen = perm[:k]
 
-    e_ref = rng.uniform(*config.e_ref_range, size=n)
-    p = pfrac_for_reference_efficiency(w.nodes_req, e_ref)
-
-    pref = nodes_at_efficiency(p, config.e_pref)
-    mx = nodes_at_efficiency(p, config.e_min)
-    mn = np.maximum(1, w.nodes_req // config.min_divisor)
-
-    pref = np.minimum(pref, config.pref_cap_factor * w.nodes_req)
-    mx = np.minimum(mx, config.max_cap_factor * w.nodes_req)
-    mx = np.minimum(mx, cluster_nodes)
-    pref = np.minimum(pref, mx)
-    # keep ordering min <= pref <= max; never let pref drop below the rigid
-    # request's half (jobs stay near their observed scale).
-    pref = np.maximum(pref, mn)
-    mx = np.maximum(mx, pref)
-    mn = np.minimum(mn, pref)
+    p, mn, pref, mx = _malleable_ranges(w.nodes_req, e_ref, cluster_nodes,
+                                        config)
 
     mask = np.zeros(n, dtype=bool)
     mask[chosen] = True
@@ -127,6 +146,53 @@ def transform_rigid_to_malleable(
     w.pref_nodes = np.where(mask, pref, w.nodes_req)
     w.validate(cluster_nodes)
     return w
+
+
+def batched_malleable_params(
+    workload: Workload,
+    cells: Sequence[tuple],
+    cluster_nodes: int,
+    config: TransformConfig = TransformConfig(),
+):
+    """Stacked (B, n) malleable parameters for ``cells`` of (proportion, seed).
+
+    Cell ``b`` is bit-identical to
+    ``transform_rigid_to_malleable(workload, *cells[b], cluster_nodes)`` —
+    the batched sweep engine and the looped reference share workloads
+    exactly.  Per-seed draws and range math run once per distinct seed and
+    fan out across proportions, so building a (proportion x seed) grid costs
+    O(seeds) transforms instead of O(cells).
+
+    Returns a dict of numpy arrays: ``malleable`` (B, n) bool and
+    ``pfrac/min_nodes/max_nodes/pref_nodes`` (B, n).
+    """
+    n = workload.n_jobs
+    by_seed = {}
+    for prop, seed in cells:
+        if not 0.0 <= prop <= 1.0:
+            raise ValueError(f"proportion must be in [0,1], got {prop}")
+        if seed not in by_seed:
+            perm, e_ref = _seed_draws(workload, seed, config)
+            by_seed[seed] = (perm, _malleable_ranges(
+                workload.nodes_req, e_ref, cluster_nodes, config))
+
+    B = len(cells)
+    out = {
+        "malleable": np.zeros((B, n), dtype=bool),
+        "pfrac": np.tile(workload.pfrac, (B, 1)),
+        "min_nodes": np.tile(workload.nodes_req, (B, 1)),
+        "max_nodes": np.tile(workload.nodes_req, (B, 1)),
+        "pref_nodes": np.tile(workload.nodes_req, (B, 1)),
+    }
+    for b, (prop, seed) in enumerate(cells):
+        perm, (p, mn, pref, mx) = by_seed[seed]
+        chosen = perm[: int(round(prop * n))]
+        out["malleable"][b, chosen] = True
+        out["pfrac"][b, chosen] = p[chosen]
+        out["min_nodes"][b, chosen] = mn[chosen]
+        out["max_nodes"][b, chosen] = mx[chosen]
+        out["pref_nodes"][b, chosen] = pref[chosen]
+    return out
 
 
 # ----------------------------------------------------------------------

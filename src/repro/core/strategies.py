@@ -92,6 +92,12 @@ KEEPPREF = Strategy(
 
 STRATEGIES = {s.name: s for s in (EASY, MIN, PREF, AVG, KEEPPREF)}
 
+# The paper's sweep grid (§2.3): malleable strategies crossed with
+# malleable-proportion levels.  Both sweep engines (benchmarks/sweep.py and
+# repro.sweep.runner) share these so their grids stay identical.
+MALLEABLE_STRATEGY_NAMES = ("min", "pref", "avg", "keeppref")
+SWEEP_PROPORTIONS = (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)
+
 
 def get_strategy(name: str) -> Strategy:
     try:

@@ -1,0 +1,18 @@
+# Batched device-resident sweep engine: the paper's (strategy x proportion
+# x seed) grid evaluated as fixed-shape batched lanes on one device.
+#
+# - batch:       event-stepped, active-set-windowed batched simulator
+# - metrics_jax: on-device port of repro.core.metrics.run_metrics
+# - cache:       content-hash on-disk result cache (skip completed cells)
+# - runner:      grid orchestration, seed aggregation, DES crosscheck, CLI
+from .batch import (BatchedLanes, EngineConfig, SweepEngineError,
+                    build_lanes, simulate_lanes)
+from .cache import SweepCache, cell_fingerprint
+from .metrics_jax import batched_metrics
+from .runner import sweep_workload_jax
+
+__all__ = [
+    "BatchedLanes", "EngineConfig", "SweepEngineError", "build_lanes",
+    "simulate_lanes", "SweepCache", "cell_fingerprint", "batched_metrics",
+    "sweep_workload_jax",
+]

@@ -1,0 +1,621 @@
+"""Event-stepped batched scheduling engine for sweep grids.
+
+Evaluates many (strategy-policy, proportion, seed) *lanes* of the paper's
+sweep in lockstep on one device.  Three structural ideas make a batched
+malleable-scheduling simulation fast on real hardware:
+
+1. **Event-quantized steps, not ticks.**  Like the reference DES
+   (``core/simulator.py``), scheduler state only changes on the first tick
+   after a job submission or completion, so each ``lax.scan`` step jumps to
+   the next event's tick instead of walking every tick (~2 steps/job vs.
+   tens of thousands of ticks per trace).  When a scheduling pass changed
+   state while jobs stayed queued, the next step is clamped to ``t + tick``
+   so the pass converges over subsequent ticks exactly like dense per-tick
+   ElastiSim (the documented ``sim_jax`` fidelity model).
+
+2. **Active-set windowing.**  Per-step work is O(window), not O(jobs): each
+   lane's queued+running jobs (plus a prefetch reserve of upcoming arrivals)
+   are compacted into a fixed ``W``-slot buffer every ``chunk`` steps.
+   Buffer slots stay in FCFS (submit-rank) order, so the FCFS start pass is
+   a masked cumulative sum with no sorting.  A lane that would advance past
+   its last prefetched arrival freezes until the next compaction; if no lane
+   can advance at all the driver escalates to a 2x window and recompiles.
+
+3. **Sort-free scheduling passes.**  Every per-step pass is built from
+   cumulative sums and integer threshold bisection — no ``argsort`` inside
+   the hot loop (an XLA CPU sort costs more than an entire scheduling pass):
+
+   * Step 1 FCFS prefix: masked cumsum over ``want`` in slot order + the
+     head fallback to ``floor``.
+   * Backfill fill pass: ``fill_rounds`` rounds of FCFS-ordered floor
+     fill, each round skipping jobs larger than the free pool (approximates
+     EASY's skip-over backfill scan; no shadow-time reservation — the same
+     documented "backfill-lite" caveat as ``sim_jax``).
+   * Step 2/3 greedy shrink/expand: descending/ascending priority prefix
+     waterfill via bisection on the integer priority threshold, with the
+     marginal priority class taken partially in slot (FCFS) order.
+   * AVG's balanced variant: the same fixed-iteration level bisection as
+     ``core/redistribute.py`` with the integer-rounding give-back routed
+     through the threshold waterfill.
+
+Strategy *structure* is static per compiled engine (greedy vs. balanced);
+strategy *parameters* (start want/floor, shrink floor, priority reference)
+are data, so EASY/MIN/PREF/KEEPPREF lanes share one compilation and one
+batch.
+
+Fidelity vs. the reference DES (documented in ``sweep/README.md``):
+completions and starts quantized to tick boundaries; backfill-lite (no
+shadow reservation); shrink/expand tie-break in FCFS order rather than the
+DES running-set insertion order; scheduling converges over subsequent ticks
+instead of an in-tick fixpoint.  ``runner.py --crosscheck`` quantifies the
+resulting metric deltas against the DES per cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jobs import DONE, PENDING, QUEUED, RUNNING, Workload
+from repro.core.speedup import (TransformConfig, amdahl_speedup,
+                                batched_malleable_params)
+from repro.core.strategies import Strategy, priority_min
+
+# Bump when engine semantics change: invalidates sweep-cache entries.
+ENGINE_VERSION = 1
+
+_TICK_EPS = 1e-6   # ceil guard, matches the DES event quantization
+_REM_EPS = 1e-5    # remaining-work completion threshold (fraction of job)
+
+
+class SweepEngineError(RuntimeError):
+    """The engine cannot make progress even at the maximum window size."""
+
+
+class BatchedLanes(NamedTuple):
+    """Fixed-shape lane batch: one lane per (strategy-policy, prop, seed).
+
+    Jobs are pre-sorted by submission time so array index == FCFS rank.
+    ``submit`` and ``runtime`` are shared across lanes (the sweep reuses one
+    trace); everything else is per-lane data.
+    """
+
+    submit: jax.Array        # f32 (n,) ascending
+    runtime: jax.Array       # f32 (n,) reference runtime (shared)
+    malleable: jax.Array     # bool (B, n)
+    min_nodes: jax.Array     # i32 (B, n)
+    max_nodes: jax.Array     # i32 (B, n)
+    pfrac: jax.Array         # f32 (B, n)
+    inv_ref: jax.Array       # f32 (B, n): 1 / (S(nodes_req) * runtime)
+    want: jax.Array          # i32 (B, n) start-pass target allocation
+    floor: jax.Array         # i32 (B, n) smallest start allocation
+    shrink_floor: jax.Array  # i32 (B, n) smallest Step-2 allocation
+    prio_ref: jax.Array      # i32 (B, n): greedy priority = alloc - prio_ref
+
+    @property
+    def n_lanes(self) -> int:
+        return self.malleable.shape[0]
+
+    @property
+    def n_jobs(self) -> int:
+        return self.malleable.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    capacity: int
+    tick: float
+    balanced: bool = False    # AVG lanes (balanced redistribution)
+    window: int = 0           # starting active-set slots; 0 = auto
+    chunk: int = 160          # scan steps between compactions
+    fill_rounds: int = 2      # FCFS skip-fill rounds per scheduling pass
+    reserve_slack: int = 64   # min arrival-prefetch slots kept in the window
+    max_steps_factor: int = 16  # step budget = factor * n_jobs + 2048
+
+
+def build_lanes(
+    workload: Workload,
+    cluster_nodes: int,
+    lanes: Sequence[Tuple[Strategy, float, int]],
+    config: TransformConfig = TransformConfig(),
+) -> Tuple[BatchedLanes, np.ndarray]:
+    """Stack (strategy, proportion, seed) lanes into device arrays.
+
+    All strategies in ``lanes`` must share the same engine structure
+    (``strategy.balanced``).  Returns the batch plus ``order``, the
+    submit-sort permutation (results come back in sorted order; apply
+    ``np.argsort(order)`` to recover original job order).
+    """
+    if len({s.balanced for s, _, _ in lanes if s.malleable}) > 1:
+        raise ValueError("lanes mix balanced and greedy engine structures")
+    order = np.argsort(workload.submit, kind="stable")
+    w = workload.take(order)
+    params = batched_malleable_params(
+        w, [(prop, seed) for _, prop, seed in lanes], cluster_nodes, config)
+
+    B = len(lanes)
+    req = np.tile(w.nodes_req, (B, 1))
+    mall = params["malleable"]
+    mn, mx = params["min_nodes"], params["max_nodes"]
+    pref, pfrac = params["pref_nodes"], params["pfrac"]
+
+    want = np.empty_like(req)
+    floor = np.empty_like(req)
+    sfloor = np.empty_like(req)
+    prio_ref = np.empty_like(req)
+    for b, (strat, _, _) in enumerate(lanes):
+        if strat.malleable:
+            def pick(which):
+                return strat.pick(which, mn[b], pref[b], req[b])
+            want[b] = np.where(mall[b], pick(strat.start_want), req[b])
+            floor[b] = np.where(mall[b], pick(strat.start_floor), req[b])
+            sfloor[b] = np.where(mall[b], pick(strat.shrink_floor), req[b])
+            # greedy priority = alloc - reference (Eqs. 1-2); AVG's Eq. 3
+            # is handled by the balanced engine structure instead
+            prio_ref[b] = pick(
+                "min" if strat.priority is priority_min else "pref")
+        else:
+            mall[b] = False
+            mn[b] = mx[b] = req[b]
+            want[b] = floor[b] = sfloor[b] = req[b]
+            prio_ref[b] = req[b]
+
+    s_ref = amdahl_speedup(req, pfrac)
+    batch = BatchedLanes(
+        submit=jnp.asarray(w.submit, jnp.float32),
+        runtime=jnp.asarray(w.runtime, jnp.float32),
+        malleable=jnp.asarray(mall),
+        min_nodes=jnp.asarray(mn, jnp.int32),
+        max_nodes=jnp.asarray(mx, jnp.int32),
+        pfrac=jnp.asarray(pfrac, jnp.float32),
+        inv_ref=jnp.asarray(1.0 / (s_ref * w.runtime[None, :]), jnp.float32),
+        want=jnp.asarray(want, jnp.int32),
+        floor=jnp.asarray(floor, jnp.int32),
+        shrink_floor=jnp.asarray(sfloor, jnp.int32),
+        prio_ref=jnp.asarray(prio_ref, jnp.int32),
+    )
+    return batch, order
+
+
+# ----------------------------------------------------------------------
+# Sort-free prefix waterfills (Step 2/3): bisect the priority threshold,
+# then take the marginal class partially in slot (FCFS) order.
+def _take_desc_prefix(prio, amount, need, lo0: int, hi0: int):
+    """Per-slot take with sum == min(need, sum(amount)), highest-prio first.
+
+    ``lo0``/``hi0`` are static priority bounds: every slot with
+    ``amount > 0`` must satisfy ``lo0 < prio <= hi0``.  Equivalent to
+    ``greedy_shrink``'s take with ties broken in slot order.
+    """
+    B = prio.shape[0]
+    lo = jnp.full((B,), lo0, jnp.int32)     # invariant: S(lo) > need or lo0
+    hi = jnp.full((B,), hi0, jnp.int32)     # invariant: S(hi) <= need
+    s_hi = jnp.zeros_like(need)
+    for _ in range(int(math.ceil(math.log2(max(hi0 - lo0, 1)))) + 1):
+        mid = (lo + hi) // 2
+        s = jnp.sum(jnp.where(prio > mid[:, None], amount, 0), axis=-1)
+        ok = s <= need
+        hi = jnp.where(ok, mid, hi)
+        s_hi = jnp.where(ok, s, s_hi)
+        lo = jnp.where(ok, lo, mid)
+    theta = hi  # smallest threshold whose above-take fits within need
+    rem = need - s_hi
+    tie = prio == theta[:, None]
+    before = jnp.cumsum(jnp.where(tie, amount, 0), axis=-1)
+    tie_take = jnp.clip(rem[:, None] - (before - amount), 0, amount)
+    return jnp.where(prio > theta[:, None], amount,
+                     jnp.where(tie, tie_take, 0))
+
+
+def _give_asc_prefix(prio, room, idle, lo0: int, hi0: int):
+    """Per-slot give with sum == min(idle, sum(room)), lowest-prio first."""
+    return _take_desc_prefix(-prio, room, idle, -hi0 - 1, -lo0 + 1)
+
+
+def _level_targets(level, mn, mx):
+    span = (mx - mn).astype(jnp.float32)
+    return mn + jnp.floor(level * span + 1e-9).astype(mn.dtype)
+
+
+@jax.jit
+def _peek_active(state):
+    """Largest per-lane queued+running count — the window lower bound."""
+    active = (state == QUEUED) | (state == RUNNING)
+    return jnp.max(jnp.sum(active, axis=-1))
+
+
+def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
+                   verbose: bool = False) -> Dict[str, np.ndarray]:
+    """Run every lane to completion; returns per-job outcomes + event trace.
+
+    Output dict (numpy, job axes in submit-sorted order):
+      ``state, alloc, start_t, end_t, expand_ops, shrink_ops`` (B, n);
+      ``trace_t, trace_busy, trace_qlen`` (B, S) event-step timeline
+      (``trace_busy[k]`` holds on ``[trace_t[k], trace_t[k+1])``);
+      ``steps, window, finished``.
+
+    The window adapts per chunk: before each chunk the largest active set
+    is peeked and ``W`` escalates (2x, recompiling once per size — cached)
+    whenever active + arrival slack would not fit, or no lane advanced in
+    the previous chunk; it de-escalates with hysteresis when the active
+    set stays small.  Simulation state lives in full-size arrays between
+    chunks, so window switches continue the run instead of restarting it.
+
+    If lanes are still unfinished when the step budget runs out, their
+    jobs keep ``end_t = nan`` and ``finished`` is False (metrics report
+    them as unfinished).
+    """
+    n, B = batch.n_jobs, batch.n_lanes
+    # static greedy-priority bounds: every alloc lies in [0, max_nodes]
+    prio_lo = -int(np.max(np.asarray(batch.prio_ref)))
+    prio_hi = int(np.max(np.asarray(batch.max_nodes - batch.prio_ref)))
+    span_max = int(np.max(np.asarray(batch.max_nodes - batch.min_nodes)))
+    W_min = int(min(cfg.window or 128, n))
+    W = W_min
+
+    def fn_for(w):
+        # module-level cache: one trace/compile per static configuration
+        return _chunk_fn(cfg, n, B, w, prio_lo, prio_hi, span_max)
+
+    full = dict(
+        state=jnp.full((B, n), PENDING, jnp.int32),
+        alloc=jnp.zeros((B, n), jnp.int32),
+        remaining=jnp.ones((B, n), jnp.float32),
+        start_t=jnp.full((B, n), jnp.nan, jnp.float32),
+        end_t=jnp.full((B, n), jnp.nan, jnp.float32),
+        expand_ops=jnp.zeros((B, n), jnp.int32),
+        shrink_ops=jnp.zeros((B, n), jnp.int32),
+    )
+    k = jnp.full((B,), -1, jnp.int32)  # last processed tick index
+    retrig = jnp.zeros((B,), bool)
+
+    traces: List[Tuple[np.ndarray, ...]] = []
+    steps = 0
+    w_peak = W
+    low_streak = 0
+    max_steps = cfg.max_steps_factor * n + 2048
+    while steps < max_steps:
+        n_active = int(_peek_active(full["state"]))
+        while n_active + cfg.reserve_slack > W and W < n:
+            W = min(2 * W, n)
+            low_streak = 0
+            if verbose:
+                print(f"[sweep.batch] active={n_active} -> window W={W}")
+        if W > W_min and n_active + cfg.reserve_slack <= W // 2:
+            low_streak += 1
+            if low_streak >= 2:
+                W, low_streak = W // 2, 0
+        else:
+            low_streak = 0
+        w_peak = max(w_peak, W)
+
+        k_before = np.asarray(k)
+        full, k, retrig, ys, all_done = fn_for(W)(batch, full, k, retrig)
+        traces.append(tuple(np.asarray(y) for y in ys))
+        steps += cfg.chunk
+        if bool(all_done):
+            break
+        if np.array_equal(k_before, np.asarray(k)):
+            # nothing advanced: every lane is frozen waiting for arrivals
+            # that do not fit -> the window must grow
+            if W >= n:
+                raise SweepEngineError(
+                    "engine stalled with the window at the full job count")
+            W = min(2 * W, n)
+            low_streak = 0
+
+    out = {kk: np.asarray(v) for kk, v in full.items()}
+    out["trace_t"] = np.concatenate([t for t, _, _ in traces], axis=1)
+    out["trace_busy"] = np.concatenate([b for _, b, _ in traces], axis=1)
+    out["trace_qlen"] = np.concatenate([q for _, _, q in traces], axis=1)
+    out["steps"] = steps
+    out["window"] = w_peak
+    out["finished"] = bool(np.all(out["state"] == DONE))
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
+              prio_lo: int, prio_hi: int, span_max: int):
+    """Compile the compaction + K-step scan + scatter-back chunk kernel."""
+    K = cfg.chunk
+    capacity = jnp.int32(cfg.capacity)
+    tick = jnp.float32(cfg.tick)
+    level_iters = int(math.ceil(math.log2(span_max + 2))) + 1
+    rows = jnp.arange(B)[:, None]
+    lane = jnp.arange(B)
+    INF = jnp.float32(jnp.inf)
+
+    arW = jnp.arange(W)[None, :]
+
+    def first_true(mask):
+        """(head-position mask, any-true) without gathers or scatters."""
+        head = jnp.argmax(mask, axis=-1)
+        return mask & (arW == head[:, None])
+
+    def schedule_pass(bj, bstate, balloc, bstart, t_next, act):
+        """One Steps-1..3 scheduling pass on the window buffer.
+
+        Head bookkeeping uses first-true masks and masked sums instead of
+        per-lane gathers/scatters, and the shrink / expand / extra fill
+        passes are skipped via ``lax.cond`` on whole-batch predicates —
+        both matter: XLA:CPU pays far more for gather/scatter/cumsum
+        kernels than for fused elementwise work.
+        """
+        running = bstate == RUNNING
+        free = capacity - jnp.sum(jnp.where(running, balloc, 0), axis=-1)
+
+        # -- Step 1: FCFS prefix (slots are in FCFS order) ----------------
+        queued = (bstate == QUEUED) & act[:, None]
+        cumw = jnp.cumsum(jnp.where(queued, bj.want, 0), axis=-1)
+        s1 = queued & (cumw <= free[:, None])
+        used = jnp.max(jnp.where(s1, cumw, 0), axis=-1)
+        leftover = free - used
+        # head fallback: first queued job not started, floor fits leftover
+        h_mask = first_true(queued & ~s1)
+        hfloor = jnp.sum(jnp.where(h_mask, bj.floor, 0), axis=-1)
+        hwant = jnp.sum(jnp.where(h_mask, bj.want, 0), axis=-1)
+        h_ok = (hfloor > 0) & (hfloor <= leftover)  # floor >= 1 on real jobs
+        h_alloc = jnp.clip(leftover, hfloor, hwant)
+
+        h_upd = h_mask & h_ok[:, None]
+        started = s1 | h_upd
+        balloc = jnp.where(s1, bj.want, balloc)
+        balloc = jnp.where(h_upd, h_alloc[:, None], balloc)
+        bstate = jnp.where(started, RUNNING, bstate)
+        bstart = jnp.where(started, t_next[:, None], bstart)
+        free = leftover - jnp.where(h_ok, h_alloc, 0)
+
+        # -- backfill-lite: FCFS floor-fill, skipping too-big jobs --------
+        def fill_round(args):
+            bstate, balloc, bstart, free, fits = args
+            cumf = jnp.cumsum(jnp.where(fits, bj.floor, 0), axis=-1)
+            s2 = fits & (cumf <= free[:, None])
+            bstate = jnp.where(s2, RUNNING, bstate)
+            balloc = jnp.where(s2, bj.floor, balloc)
+            bstart = jnp.where(s2, t_next[:, None], bstart)
+            free = free - jnp.max(jnp.where(s2, cumf, 0), axis=-1)
+            return bstate, balloc, bstart, free, fits
+
+        for _ in range(cfg.fill_rounds):
+            fits = (bstate == QUEUED) & act[:, None] & \
+                (bj.floor <= free[:, None])
+            bstate, balloc, bstart, free, _ = jax.lax.cond(
+                jnp.any(fits), fill_round, lambda a: a,
+                (bstate, balloc, bstart, free, fits))
+
+        # -- Step 2: shrink running malleable jobs to admit the head ------
+        h_mask = first_true((bstate == QUEUED) & act[:, None])
+        hfloor = jnp.sum(jnp.where(h_mask, bj.floor, 0), axis=-1)
+        hwant = jnp.sum(jnp.where(h_mask, bj.want, 0), axis=-1)
+        has_head = hfloor > 0
+        deficit = jnp.where(has_head, hfloor - free, 0)
+
+        shrinkable = (bstate == RUNNING) & bj.malleable
+        fl = jnp.where(shrinkable,
+                       jnp.minimum(bj.shrink_floor, balloc), balloc)
+        surplus = jnp.maximum(balloc - fl, 0)
+        tot_surplus = jnp.sum(surplus, axis=-1)
+        need = jnp.where((deficit > 0) & (tot_surplus >= deficit), deficit, 0)
+
+        if cfg.balanced:
+            def shrink(balloc):
+                mn_eff = jnp.where(shrinkable, fl, balloc)
+                mx_eff = jnp.where(shrinkable, bj.max_nodes, balloc)
+                lo = jnp.zeros((B,), jnp.float32)
+                hi = jnp.ones((B,), jnp.float32)
+                freed_lo = tot_surplus
+                for _ in range(level_iters):
+                    mid = 0.5 * (lo + hi)
+                    tgt = jnp.minimum(
+                        balloc, _level_targets(mid[:, None], mn_eff, mx_eff))
+                    freed = jnp.sum(balloc - tgt, axis=-1)
+                    ok = freed >= need
+                    lo = jnp.where(ok, mid, lo)
+                    hi = jnp.where(ok, hi, mid)
+                    freed_lo = jnp.where(ok, freed, freed_lo)
+                tgt = jnp.minimum(
+                    balloc, _level_targets(lo[:, None], mn_eff, mx_eff))
+                # return integer-rounding excess to the most-shrunk jobs
+                delta = balloc - tgt
+                give = _give_asc_prefix(-delta, delta, freed_lo - need,
+                                        -span_max - 1, 0)
+                return balloc - (delta - give)
+        else:
+            def shrink(balloc):
+                prio = balloc - bj.prio_ref
+                return balloc - _take_desc_prefix(prio, surplus, need,
+                                                  prio_lo - 1, prio_hi)
+
+        balloc = jax.lax.cond(jnp.any(need > 0), shrink,
+                              lambda b: b, balloc)
+        free = free + need  # the take sums to exactly `need` by construction
+
+        h_ok = has_head & (hfloor <= free)
+        h_alloc = jnp.clip(free, hfloor, hwant)
+        h_upd = h_mask & h_ok[:, None]
+        balloc = jnp.where(h_upd, h_alloc[:, None], balloc)
+        bstate = jnp.where(h_upd, RUNNING, bstate)
+        bstart = jnp.where(h_upd, t_next[:, None], bstart)
+        free = free - jnp.where(h_ok, h_alloc, 0)
+
+        # -- Step 3: expand into remaining idle nodes ---------------------
+        expandable = (bstate == RUNNING) & bj.malleable
+        idle = jnp.maximum(jnp.where(jnp.any(expandable, axis=-1), free, 0),
+                           0)
+        if cfg.balanced:
+            def expand(balloc):
+                mn_eff = jnp.where(expandable, bj.min_nodes, balloc)
+                cap_eff = jnp.where(expandable, bj.max_nodes, balloc)
+                room_tot = jnp.sum(jnp.maximum(cap_eff - balloc, 0), axis=-1)
+                idle_eff = jnp.minimum(idle, room_tot)
+                lo = jnp.zeros((B,), jnp.float32)
+                hi = jnp.ones((B,), jnp.float32)
+                used_lo = jnp.zeros_like(idle_eff)
+                for _ in range(level_iters):
+                    mid = 0.5 * (lo + hi)
+                    tgt = jnp.maximum(balloc, jnp.minimum(
+                        _level_targets(mid[:, None], mn_eff, cap_eff),
+                        cap_eff))
+                    spent = jnp.sum(tgt - balloc, axis=-1)
+                    ok = spent <= idle_eff
+                    lo = jnp.where(ok, mid, lo)
+                    hi = jnp.where(ok, hi, mid)
+                    used_lo = jnp.where(ok, spent, used_lo)
+                tgt = jnp.maximum(balloc, jnp.minimum(
+                    _level_targets(lo[:, None], mn_eff, cap_eff), cap_eff))
+                # hand the leftover to the least-utilized jobs (2^-16 levels)
+                span = jnp.maximum(cap_eff - mn_eff, 1)
+                balance_q = ((tgt - mn_eff) * 65536) // span
+                room = jnp.maximum(cap_eff - tgt, 0)
+                give = _give_asc_prefix(balance_q, room, idle_eff - used_lo,
+                                        -1, 65537)
+                return tgt + give
+        else:
+            def expand(balloc):
+                room = jnp.where(expandable,
+                                 jnp.maximum(bj.max_nodes - balloc, 0), 0)
+                prio = balloc - bj.prio_ref
+                return balloc + _give_asc_prefix(room=room, prio=prio,
+                                                 idle=idle, lo0=prio_lo - 1,
+                                                 hi0=prio_hi)
+
+        balloc = jax.lax.cond(jnp.any(idle > 0), expand, lambda b: b, balloc)
+        return bstate, balloc, bstart
+
+    def step(bj, arrival_limit, carry, _):
+        (bstate, balloc, brem, bstart, bend, beops, bsops,
+         k, retrig, frozen) = carry
+        t = k.astype(jnp.float32) * tick
+        running = bstate == RUNNING
+        alloc_f = jnp.maximum(balloc.astype(jnp.float32), 1.0)
+        s_cur = 1.0 / ((1.0 - bj.pfrac) + bj.pfrac / alloc_f)
+        rate = s_cur * bj.inv_ref
+        pending = bstate == PENDING
+        # one fused reduction over completions and arrivals
+        ev = jnp.where(running, t[:, None] + brem / rate,
+                       jnp.where(pending, bj.submit, INF))
+        t_event = jnp.min(ev, axis=-1)
+        t_event = jnp.minimum(t_event, jnp.where(retrig, t + tick, INF))
+
+        # strictly-future tick: everything <= k*tick was already processed
+        k_cand = jnp.maximum(
+            jnp.ceil(t_event / tick - _TICK_EPS).astype(jnp.int32), k + 1)
+        t_cand = k_cand.astype(jnp.float32) * tick
+        # freeze before swallowing an arrival that was not prefetched
+        newly_frozen = t_cand + 0.5 * tick >= arrival_limit
+        act = ~frozen & ~newly_frozen & jnp.isfinite(t_event)
+        k_next = jnp.where(act, k_cand, k)
+        t_next = k_next.astype(jnp.float32) * tick
+        dt = jnp.maximum(t_next - t, 0.0)
+
+        # progress + tick-quantized completions
+        brem = jnp.where(running, brem - dt[:, None] * rate, brem)
+        done_now = running & (brem <= _REM_EPS) & act[:, None]
+        bstate = jnp.where(done_now, DONE, bstate)
+        bend = jnp.where(done_now, t_next[:, None], bend)
+        balloc = jnp.where(done_now, 0, balloc)
+        brem = jnp.where(done_now, 0.0, brem)
+
+        # arrivals (half-tick slack absorbs f32 rounding of the ceil)
+        arrived = pending & act[:, None] & \
+            (bj.submit <= (t_next + 0.5 * tick)[:, None])
+        bstate = jnp.where(arrived, QUEUED, bstate)
+
+        running0 = bstate == RUNNING
+        alloc0 = balloc
+        state0 = bstate
+        bstate, balloc, bstart = schedule_pass(
+            bj, bstate, balloc, bstart, t_next, act)
+
+        # net per-invocation op accounting (jobs running before & after)
+        still = running0 & (bstate == RUNNING)
+        d = balloc - alloc0
+        beops = beops + (still & (d > 0)).astype(jnp.int32)
+        bsops = bsops + (still & (d < 0)).astype(jnp.int32)
+
+        busy = jnp.sum(jnp.where(bstate == RUNNING, balloc, 0), axis=-1)
+        qlen = jnp.sum((bstate == QUEUED).astype(jnp.int32), axis=-1)
+        # rerun next tick while a pass changed state and jobs stayed queued
+        changed = jnp.any((balloc != alloc0) | (bstate != state0), axis=-1)
+        retrig = changed & (qlen > 0)
+        frozen = frozen | newly_frozen
+        carry = (bstate, balloc, brem, bstart, bend, beops, bsops,
+                 k_next, retrig, frozen)
+        return carry, (t_next, busy.astype(jnp.int32), qlen)
+
+    @jax.jit
+    def run_chunk(batch, full, k, retrig):
+        state = full["state"]
+        active = (state == QUEUED) | (state == RUNNING)
+        n_active = jnp.sum(active, axis=-1)
+        pending = state == PENDING
+        aptr = n - jnp.sum(pending, axis=-1)  # pending is a suffix (FCFS)
+
+        # -- compact active + arrival reserve into W slots (FCFS order) ---
+        ar = jnp.arange(n)[None, :]
+        reserve = jnp.maximum(W - n_active, 0)
+        sel = active | (pending & (ar < (aptr + reserve)[:, None]))
+        pos = jnp.cumsum(sel, axis=-1) - 1
+        pos = jnp.where(sel & (pos < W), pos, W)  # W: dropped by scatter
+        idx = jnp.full((B, W), n, jnp.int32).at[rows, pos].set(
+            jnp.broadcast_to(ar, (B, n)))
+        slot_ok = idx < n
+        gidx = jnp.minimum(idx, n - 1)
+
+        def g2(a, fill):
+            return jnp.where(slot_ok, jnp.take_along_axis(a, gidx, -1), fill)
+
+        bj = BatchedLanes(
+            submit=jnp.where(slot_ok, batch.submit[gidx], INF),
+            runtime=jnp.where(slot_ok, batch.runtime[gidx], 1.0),
+            malleable=g2(batch.malleable, False),
+            min_nodes=g2(batch.min_nodes, 1),
+            max_nodes=g2(batch.max_nodes, 1),
+            pfrac=g2(batch.pfrac, jnp.float32(0.0)),
+            inv_ref=g2(batch.inv_ref, jnp.float32(1.0)),
+            want=g2(batch.want, 1),
+            floor=g2(batch.floor, 1),
+            shrink_floor=g2(batch.shrink_floor, 1),
+            prio_ref=g2(batch.prio_ref, 0),
+        )
+        n_prefetch = jnp.sum(sel & pending, axis=-1)
+        lim_idx = aptr + n_prefetch
+        arrival_limit = jnp.where(
+            lim_idx < n, batch.submit[jnp.minimum(lim_idx, n - 1)], INF)
+
+        carry = (
+            g2(state, jnp.int32(DONE)), g2(full["alloc"], 0),
+            g2(full["remaining"], jnp.float32(0.0)),
+            g2(full["start_t"], jnp.float32(jnp.nan)),
+            g2(full["end_t"], jnp.float32(jnp.nan)),
+            g2(full["expand_ops"], 0), g2(full["shrink_ops"], 0),
+            k, retrig, jnp.zeros((B,), bool),
+        )
+        carry, ys = jax.lax.scan(
+            lambda c, x: step(bj, arrival_limit, c, x), carry, None, length=K)
+        (bstate, balloc, brem, bstart, bend, beops, bsops,
+         k, retrig, _frozen) = carry
+
+        def sc(a, buf):  # idx == n rows are dropped (out of bounds)
+            return a.at[rows, idx].set(buf)
+
+        full = dict(
+            state=sc(full["state"], bstate),
+            alloc=sc(full["alloc"], balloc),
+            remaining=sc(full["remaining"], brem),
+            start_t=sc(full["start_t"], bstart),
+            end_t=sc(full["end_t"], bend),
+            expand_ops=sc(full["expand_ops"], beops),
+            shrink_ops=sc(full["shrink_ops"], bsops),
+        )
+        all_done = jnp.all(full["state"] == DONE)
+        ts, busy, qlen = ys
+        return full, k, retrig, (ts.T, busy.T, qlen.T), all_done
+
+    return run_chunk

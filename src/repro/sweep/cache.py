@@ -1,0 +1,89 @@
+"""On-disk result cache for sweep cells.
+
+A *cell* is one (trace spec, scale, strategy, proportion, seed) simulation.
+Its cache key is the SHA-256 of a canonical-JSON fingerprint that includes
+everything that determines the metrics:
+
+  * trace identity: generator name, trace seed, scale;
+  * cluster: capacity, tick;
+  * cell: strategy name, malleable proportion, transform seed;
+  * transform configuration (efficiency thresholds and caps);
+  * engine identity: ``{des,jax}`` + :data:`repro.sweep.batch.ENGINE_VERSION`
+    (bumped whenever engine semantics change, so stale entries can never be
+    replayed as fresh results).
+
+Entries are one small JSON file per cell, sharded by the first two key hex
+chars; repeated sweeps skip completed cells and a partially-failed sweep
+resumes where it stopped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Dict, Optional
+
+from repro.core.speedup import TransformConfig
+
+from .batch import ENGINE_VERSION
+
+
+def cell_fingerprint(workload: str, trace_seed: int, scale: float,
+                     capacity: int, tick: float, strategy: str,
+                     proportion: float, seed: int, engine: str,
+                     config: TransformConfig = TransformConfig()) -> Dict:
+    """The canonical content of a cell's cache key (JSON-serializable)."""
+    return {
+        "workload": workload,
+        "trace_seed": int(trace_seed),
+        "scale": float(scale),
+        "capacity": int(capacity),
+        "tick": float(tick),
+        "strategy": strategy,
+        "proportion": float(proportion),
+        "seed": int(seed),
+        "engine": engine,
+        "engine_version": ENGINE_VERSION,
+        "transform": dataclasses.asdict(config),
+    }
+
+
+class SweepCache:
+    """Content-addressed store of per-cell metric dicts."""
+
+    def __init__(self, root) -> None:
+        self.root = pathlib.Path(root)
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(fingerprint: Dict) -> str:
+        blob = json.dumps(fingerprint, sort_keys=True,
+                          separators=(",", ":")).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.root / key[:2] / f"{key}.json"
+
+    def get(self, fingerprint: Dict) -> Optional[Dict[str, float]]:
+        path = self._path(self.key(fingerprint))
+        if not path.exists():
+            self.misses += 1
+            return None
+        try:
+            entry = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return entry["metrics"]
+
+    def put(self, fingerprint: Dict, metrics: Dict[str, float]) -> None:
+        path = self._path(self.key(fingerprint))
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            {"fingerprint": fingerprint, "metrics": metrics}, indent=1,
+            default=float))
+        tmp.replace(path)

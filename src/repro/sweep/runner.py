@@ -1,0 +1,271 @@
+"""Sweep-grid orchestration for the batched device-resident engine.
+
+Evaluates the paper's (strategy x proportion x seed) grid for one workload
+in a single process: greedy-structured strategies (EASY/MIN/PREF/KEEPPREF)
+share one engine batch and one compilation, AVG runs in a second balanced
+batch.  Per-cell metrics come back through :mod:`metrics_jax`, get cached by
+content hash (:mod:`cache`), and are aggregated with the existing
+:func:`repro.core.metrics.aggregate_seeds` so downstream consumers
+(``benchmarks/figures.py``, ``best_improvements``) see the exact result
+shape the looped DES sweep produces.
+
+``--crosscheck N`` re-runs N sampled cells through the numpy DES and
+reports per-metric deltas against the documented engine fidelity gaps
+(see ``sweep/README.md``).
+
+CLI::
+
+  PYTHONPATH=src python -m repro.sweep --workload haswell --scale 0.05 \
+      --seeds 4 --crosscheck 4 --out artifacts/sweep-haswell-jax.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (CLUSTERS, DONE, Window, aggregate_seeds,
+                        get_strategy, run_metrics, simulate, traces,
+                        transform_rigid_to_malleable)
+from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
+                                   SWEEP_PROPORTIONS)
+
+from .batch import EngineConfig, build_lanes, simulate_lanes
+from .cache import SweepCache, cell_fingerprint
+from .metrics_jax import batched_metrics
+
+PROPORTIONS = SWEEP_PROPORTIONS
+MALLEABLE_STRATEGIES = MALLEABLE_STRATEGY_NAMES
+
+# Crosscheck tolerances vs. the numpy DES: (relative, absolute).  The two
+# engines differ by documented approximations (tick-quantized completions,
+# backfill-lite without shadow reservation, FCFS tie-breaks, converge-over-
+# ticks scheduling), so these bound the *expected* methodology gap, not
+# float noise.  Absolute floors are in the metric's own unit and matter
+# where the reference value is near zero (e.g. wait at low contention).
+CROSSCHECK_TOLERANCES = {
+    "turnaround_mean": (0.15, 60.0),
+    "makespan_mean": (0.15, 60.0),
+    "wait_mean": (0.35, 120.0),
+    "utilization": (0.10, 0.02),
+}
+
+
+def _grid_cells(proportions, strategies, seeds
+                ) -> List[Tuple[str, float, int]]:
+    cells = [("easy", 0.0, 0)]
+    for strat in strategies:
+        for prop in proportions:
+            if prop == 0.0:
+                continue
+            for seed in range(seeds):
+                cells.append((strat, float(prop), seed))
+    return cells
+
+
+def sweep_workload_jax(
+    name: str,
+    *,
+    scale: float = 0.2,
+    seeds: int = 3,
+    proportions: Sequence[float] = PROPORTIONS,
+    strategies: Sequence[str] = MALLEABLE_STRATEGIES,
+    trace_seed: int = 0,
+    crosscheck: int = 0,
+    cache_dir: Optional[str] = None,
+    window_slots: int = 0,
+    chunk: int = 160,
+    verbose: bool = True,
+) -> Dict:
+    """Batched-engine replacement for ``benchmarks.sweep.sweep_workload``.
+
+    Returns the same ``{"rigid": ..., "strat@NN": ..., "_meta": ...}``
+    aggregate dict, plus ``_engine`` wall-clock info and (optionally)
+    ``_crosscheck`` DES-delta records.
+    """
+    cl = CLUSTERS[name]
+    w_rigid = traces.generate(name, seed=trace_seed, scale=scale)
+    window = Window.for_workload(w_rigid)
+    cache = SweepCache(cache_dir) if cache_dir else None
+
+    cells = _grid_cells(proportions, strategies, seeds)
+    fingerprints = {
+        cell: cell_fingerprint(name, trace_seed, scale, cl.nodes, cl.tick,
+                               cell[0], cell[1], cell[2], engine="jax")
+        for cell in cells
+    }
+    metrics: Dict[Tuple[str, float, int], Dict[str, float]] = {}
+    if cache is not None:
+        for cell in cells:
+            hit = cache.get(fingerprints[cell])
+            if hit is not None:
+                metrics[cell] = hit
+
+    todo = [c for c in cells if c not in metrics]
+    groups = {
+        False: [c for c in todo if not get_strategy(c[0]).balanced],
+        True: [c for c in todo if get_strategy(c[0]).balanced],
+    }
+    t0 = time.monotonic()
+    engine_info: Dict[str, float] = {}
+    for balanced, group in groups.items():
+        if not group:
+            continue
+        lanes = [(get_strategy(s), p, sd) for s, p, sd in group]
+        batch, _order = build_lanes(w_rigid, cl.nodes, lanes)
+        cfg = EngineConfig(capacity=cl.nodes, tick=cl.tick,
+                           balanced=balanced, window=window_slots,
+                           chunk=chunk)
+        res = simulate_lanes(batch, cfg, verbose=verbose)
+        per_lane = batched_metrics(res, batch.submit, batch.malleable,
+                                   window, cl.nodes)
+        # only completed lanes enter the persistent cache: a lane cut off
+        # by the step budget has partial metrics that must not be replayed
+        lane_done = np.all(res["state"] == DONE, axis=1)
+        for cell, m, done in zip(group, per_lane, lane_done):
+            metrics[cell] = m
+            if cache is not None and bool(done):
+                cache.put(fingerprints[cell], m)
+        tag = "balanced" if balanced else "greedy"
+        engine_info[f"{tag}_lanes"] = len(group)
+        engine_info[f"{tag}_steps"] = res["steps"]
+        engine_info[f"{tag}_window"] = res["window"]
+        if not res["finished"]:
+            print(f"[sweep-jax:{name}] WARNING: {tag} batch hit the step "
+                  "budget with unfinished lanes")
+    engine_info["sim_seconds"] = time.monotonic() - t0
+    if cache is not None:
+        engine_info["cache_hits"] = cache.hits
+
+    # -- assemble the looped-sweep result shape ---------------------------
+    rigid = metrics[("easy", 0.0, 0)]
+    results: Dict[str, Dict] = {"rigid": rigid}
+    for strat in strategies:
+        for prop in proportions:
+            if prop == 0.0:
+                results[f"{strat}@0"] = rigid
+                continue
+            per_seed = [metrics[(strat, float(prop), sd)]
+                        for sd in range(seeds)]
+            agg = aggregate_seeds(per_seed)
+            results[f"{strat}@{int(prop * 100)}"] = agg
+            if verbose:
+                print(f"[sweep-jax:{name}] {strat}@{int(prop * 100)}%: "
+                      f"turnaround={agg['turnaround_mean_mean']:,.0f}"
+                      f"±{agg['turnaround_mean_iqr']:,.0f} "
+                      f"wait={agg['wait_mean_mean']:,.0f} "
+                      f"util={agg['utilization_mean']:.3f} "
+                      f"expand/job={agg['expand_per_job_mean']:.1f} "
+                      f"shrink/job={agg['shrink_per_job_mean']:.1f}")
+    results["_meta"] = {"workload": name, "scale": scale, "seeds": seeds,
+                        "proportions": list(proportions), "engine": "jax"}
+    results["_engine"] = engine_info
+    if crosscheck:
+        t_cc = time.monotonic()
+        results["_crosscheck"] = crosscheck_cells(
+            name, metrics, n_cells=crosscheck, scale=scale,
+            trace_seed=trace_seed, verbose=verbose)
+        # DES re-runs are reference work, not engine time: recorded so
+        # benchmarks can separate them from the engine wall-clock
+        results["_crosscheck"]["seconds"] = time.monotonic() - t_cc
+    return results
+
+
+def crosscheck_cells(name: str, metrics: Dict, *, n_cells: int,
+                     scale: float, trace_seed: int = 0,
+                     verbose: bool = True) -> Dict:
+    """Re-run sampled cells through the numpy DES; report metric deltas."""
+    cl = CLUSTERS[name]
+    w_rigid = traces.generate(name, seed=trace_seed, scale=scale)
+    window = Window.for_workload(w_rigid)
+    cells = sorted(metrics)
+    rng = np.random.default_rng(0)
+    picked = [cells[i] for i in
+              rng.choice(len(cells), size=min(n_cells, len(cells)),
+                         replace=False)]
+    records = []
+    for strat, prop, seed in picked:
+        wm = (w_rigid if prop == 0.0 else
+              transform_rigid_to_malleable(w_rigid, prop, seed, cl.nodes))
+        ref = run_metrics(simulate(wm, cl, get_strategy(strat)),
+                          wm, cl, window)
+        jaxm = metrics[(strat, prop, seed)]
+        deltas = {}
+        ok = True
+        for key, (rtol, atol) in CROSSCHECK_TOLERANCES.items():
+            a, b = ref[key], jaxm[key]
+            if not (np.isfinite(a) and np.isfinite(b)):
+                continue
+            err = abs(b - a)
+            within = bool(err <= max(rtol * abs(a), atol))
+            ok &= within
+            deltas[key] = {"des": a, "jax": b, "abs_err": err,
+                           "within": within}
+        records.append({"cell": f"{strat}@{int(prop * 100)}%/s{seed}",
+                        "within_tolerance": ok, "deltas": deltas})
+        if verbose:
+            worst = max(deltas.values(),
+                        key=lambda d: d["abs_err"] / max(abs(d["des"]), 1e-9))
+            print(f"[crosscheck:{name}] {strat}@{int(prop * 100)}%/s{seed}: "
+                  f"{'OK' if ok else 'EXCEEDS TOLERANCE'} "
+                  f"(worst rel err "
+                  f"{worst['abs_err'] / max(abs(worst['des']), 1e-9):.1%})")
+    return {"cells": records,
+            "all_within_tolerance": all(r["within_tolerance"]
+                                        for r in records)}
+
+
+def enable_compilation_cache(path) -> None:
+    """Persist XLA compilations so repeated sweeps skip compile time."""
+    import jax
+    try:
+        pathlib.Path(path).mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(path))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+    except Exception:  # older jax without the persistent cache knobs
+        pass
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", required=True, choices=sorted(CLUSTERS))
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--proportions", type=float, nargs="*",
+                    default=list(PROPORTIONS))
+    ap.add_argument("--crosscheck", type=int, default=0,
+                    help="re-run N sampled cells through the numpy DES")
+    ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
+                    help="per-cell result cache ('' disables)")
+    ap.add_argument("--window", type=int, default=0,
+                    help="active-set window slots (0 = auto)")
+    ap.add_argument("--chunk", type=int, default=160)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    if args.cache_dir:
+        enable_compilation_cache(
+            pathlib.Path(args.cache_dir).parent / "xla_cache")
+    results = sweep_workload_jax(
+        args.workload, scale=args.scale, seeds=args.seeds,
+        proportions=tuple(args.proportions), crosscheck=args.crosscheck,
+        cache_dir=args.cache_dir or None, window_slots=args.window,
+        chunk=args.chunk)
+    info = results["_engine"]
+    print(f"[sweep-jax:{args.workload}] engine wall "
+          f"{info['sim_seconds']:.1f}s ({info})")
+    if args.out:
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps({"results": results}, indent=1,
+                                   default=float))
+        print(f"[sweep-jax:{args.workload}] wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

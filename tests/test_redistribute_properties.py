@@ -1,0 +1,90 @@
+"""Hypothesis property tests for the redistribution waterfills (paper §2.1).
+
+Split from ``test_redistribute.py`` so the plain tests collect even when
+``hypothesis`` is not installed.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.redistribute import (balanced_expand, balanced_shrink,
+                                     greedy_expand, greedy_shrink)
+
+
+def job_arrays(draw, max_jobs=40, max_nodes=64):
+    n = draw(st.integers(1, max_jobs))
+    mn = draw(st.lists(st.integers(1, max_nodes // 4), min_size=n, max_size=n))
+    mn = np.asarray(mn, dtype=np.int64)
+    span = draw(st.lists(st.integers(0, max_nodes // 2), min_size=n, max_size=n))
+    mx = mn + np.asarray(span, dtype=np.int64)
+    frac = draw(st.lists(st.floats(0, 1), min_size=n, max_size=n))
+    alloc = mn + np.floor(np.asarray(frac) * (mx - mn)).astype(np.int64)
+    return alloc, mn, mx
+
+
+arrays = st.composite(job_arrays)()
+
+
+@given(arrays, st.integers(0, 500))
+@settings(max_examples=200, deadline=None)
+def test_greedy_shrink_invariants(arrs, need):
+    alloc, mn, mx = arrs
+    pr = alloc - mn
+    new = greedy_shrink(alloc, mn, pr, need)
+    assert np.all(new >= mn), "shrink below floor"
+    assert np.all(new <= alloc), "shrink may not expand"
+    freed = int(np.sum(alloc - new))
+    freeable = int(np.sum(alloc - mn))
+    assert freed == min(need, freeable), "frees exactly min(need, freeable)"
+
+
+@given(arrays, st.integers(0, 500))
+@settings(max_examples=200, deadline=None)
+def test_greedy_shrink_touches_fewest(arrs, need):
+    alloc, mn, mx = arrs
+    pr = alloc - mn
+    new = greedy_shrink(alloc, mn, pr, need)
+    touched = np.sum(new != alloc)
+    # at most one partially-shrunk job; all other touched jobs hit the floor
+    partial = np.sum((new != alloc) & (new != mn))
+    assert partial <= 1
+    del touched
+
+
+@given(arrays, st.integers(0, 500))
+@settings(max_examples=200, deadline=None)
+def test_greedy_expand_invariants(arrs, idle):
+    alloc, mn, mx = arrs
+    pr = alloc - mn
+    new = greedy_expand(alloc, mx, pr, idle)
+    assert np.all(new <= mx), "expand beyond cap"
+    assert np.all(new >= alloc), "expand may not shrink"
+    used = int(np.sum(new - alloc))
+    room = int(np.sum(mx - alloc))
+    assert used == min(idle, room), "uses exactly min(idle, room)"
+
+
+@given(arrays, st.integers(0, 500))
+@settings(max_examples=200, deadline=None)
+def test_balanced_shrink_invariants(arrs, need):
+    alloc, mn, mx = arrs
+    new = balanced_shrink(alloc, mn, mx, need)
+    assert np.all(new >= mn)
+    assert np.all(new <= alloc)
+    freed = int(np.sum(alloc - new))
+    freeable = int(np.sum(alloc - mn))
+    assert freed == min(need, freeable)
+
+
+@given(arrays, st.integers(0, 500))
+@settings(max_examples=200, deadline=None)
+def test_balanced_expand_invariants(arrs, idle):
+    alloc, mn, mx = arrs
+    new = balanced_expand(alloc, mn, mx, idle)
+    assert np.all(new <= mx)
+    assert np.all(new >= alloc)
+    used = int(np.sum(new - alloc))
+    room = int(np.sum(mx - alloc))
+    assert used == min(idle, room)

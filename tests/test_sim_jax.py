@@ -5,7 +5,8 @@ import pytest
 from repro.core import (EASY, STRATEGIES, Cluster, Workload, simulate,
                         transform_rigid_to_malleable)
 from repro.core.jobs import DONE
-from repro.core.sim_jax import JobArrays, simulate_jax, simulate_scan
+from repro.core.sim_jax import (JobArrays, simulate_jax, simulate_scan,
+                                simulate_scan_batch)
 
 TINY = Cluster("t", nodes=10, tick=1.0)
 
@@ -60,6 +61,20 @@ def test_jit_cache_and_vmap_over_seeds():
     st1, _ = simulate_scan(jobs, STRATEGIES["min"], 10, 1.0, 300)
     st2, _ = simulate_scan(jobs, STRATEGIES["min"], 10, 1.0, 300)
     np.testing.assert_array_equal(np.asarray(st1.end_t), np.asarray(st2.end_t))
+
+
+def test_simulate_scan_batch_matches_per_lane_runs():
+    """Stacked variants under vmap reproduce the per-lane scan exactly."""
+    variants = [_wl(seed=1), _wl(seed=2, prop=1.0)]
+    jobs = JobArrays.stack([JobArrays.from_workload(w) for w in variants])
+    stb, trb = simulate_scan_batch(jobs, STRATEGIES["min"], 10, 1.0, 300)
+    for b, w in enumerate(variants):
+        st, tr = simulate_scan(JobArrays.from_workload(w),
+                               STRATEGIES["min"], 10, 1.0, 300)
+        np.testing.assert_array_equal(np.asarray(stb.end_t)[b],
+                                      np.asarray(st.end_t))
+        np.testing.assert_array_equal(np.asarray(trb.busy)[b],
+                                      np.asarray(tr.busy))
 
 
 def test_malleable_beats_rigid_turnaround():

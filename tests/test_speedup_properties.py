@@ -1,0 +1,55 @@
+"""Hypothesis property tests for the speedup model (paper §2.2).
+
+Split from ``test_speedup.py`` so the plain tests collect even when
+``hypothesis`` is not installed.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TransformConfig, Workload, amdahl_efficiency,
+                        nodes_at_efficiency, pfrac_for_reference_efficiency,
+                        transform_rigid_to_malleable)
+
+
+@given(st.integers(2, 2048), st.floats(0.55, 0.95))
+@settings(max_examples=100, deadline=None)
+def test_pfrac_calibration(n_ref, e_ref):
+    p = pfrac_for_reference_efficiency(n_ref, e_ref)
+    e = amdahl_efficiency(n_ref, p)
+    assert abs(float(e) - e_ref) < 1e-6
+
+
+@given(st.floats(0.3, 0.99), st.floats(0.4, 0.9))
+@settings(max_examples=100, deadline=None)
+def test_nodes_at_efficiency_is_largest(p, e):
+    n = int(nodes_at_efficiency(p, e))
+    assert amdahl_efficiency(n, p) >= e - 1e-9
+    assert amdahl_efficiency(n + 1, p) < e + 1e-6 or n >= 1
+
+
+@given(st.integers(0, 1000), st.sampled_from([0.0, 0.2, 0.5, 1.0]))
+@settings(max_examples=50, deadline=None)
+def test_transform_invariants(seed, prop):
+    rng = np.random.default_rng(seed)
+    n = 50
+    w = Workload.rigid(
+        submit=np.sort(rng.uniform(0, 1000, n)),
+        runtime=rng.uniform(60, 4000, n),
+        nodes_req=rng.choice([1, 2, 4, 8, 64, 256], n),
+    )
+    wm = transform_rigid_to_malleable(w, prop, seed=seed, cluster_nodes=4392)
+    wm.validate(4392)
+    assert int(wm.malleable.sum()) == round(prop * n)
+    m = wm.malleable
+    assert np.all(wm.min_nodes[m] <= wm.nodes_req[m])
+    assert np.all(wm.max_nodes[m] >= wm.nodes_req[m] // 2)
+    cfg = TransformConfig()
+    assert np.all(wm.max_nodes[m] <= cfg.max_cap_factor * wm.nodes_req[m])
+    assert np.all(wm.pref_nodes[m] <= cfg.pref_cap_factor * wm.nodes_req[m])
+    # rigid jobs untouched
+    r = ~m
+    assert np.all(wm.min_nodes[r] == wm.nodes_req[r])
+    assert np.all(wm.max_nodes[r] == wm.nodes_req[r])

@@ -64,6 +64,8 @@ def main(argv=None) -> int:
               f"seeds={args.seeds})")
         print("#" * 72)
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        all_results: dict = {}
+        to_run = []
         for name in args.workloads:
             cache = ARTIFACTS / f"sweep-{name}.json"
             cached_results = None
@@ -77,23 +79,42 @@ def main(argv=None) -> int:
                           f"{args.engine}")
                     cached_results = None
             if cached_results is not None:
-                results = cached_results
+                all_results[name] = cached_results
                 print(f"[sweep:{name}] reusing {cache}")
             elif args.only_cached:
                 print(f"[sweep:{name}] no cached sweep artifact; skipping "
                       f"(run `python -m benchmarks.sweep --workload {name}`)")
-                continue
-            elif args.engine == "jax":
-                from repro.sweep import runner as jax_runner
-                jax_runner.enable_compilation_cache(ARTIFACTS / "xla_cache")
-                results = jax_runner.sweep_workload_jax(
-                    name, scale=args.scale, seeds=args.seeds,
-                    # --no-reuse means recompute: bypass the cell cache too
-                    cache_dir=None if args.no_reuse
-                    else str(ARTIFACTS / "sweep_cache"))
             else:
-                results = sweep.sweep_workload(name, scale=args.scale,
-                                               seeds=args.seeds)
+                to_run.append(name)
+
+        sweep_walls: dict = {}
+        batch_wall = None
+        if to_run and args.engine == "jax":
+            # all remaining clusters as ONE padded multi-trace batch:
+            # capacity/tick are lane data, so the whole set shares a
+            # single compilation per engine structure
+            from repro.sweep import runner as jax_runner
+            jax_runner.enable_compilation_cache(ARTIFACTS / "xla_cache")
+            t_sw = time.monotonic()
+            computed = jax_runner.sweep_workloads_jax(
+                to_run, scale=args.scale, seeds=args.seeds,
+                # --no-reuse means recompute: bypass the cell cache too
+                cache_dir=None if args.no_reuse
+                else str(ARTIFACTS / "sweep_cache"))
+            # one shared batch: per-workload time is not separable
+            batch_wall = time.monotonic() - t_sw
+            all_results.update(computed)
+        elif to_run:
+            for name in to_run:
+                t_sw = time.monotonic()
+                all_results[name] = sweep.sweep_workload(
+                    name, scale=args.scale, seeds=args.seeds)
+                sweep_walls[name] = time.monotonic() - t_sw
+
+        for name in args.workloads:
+            if name not in all_results:
+                continue
+            results = all_results[name]
             print()
             print(figures.render_sweep_table(results))
             summary = sweep.best_improvements(results)
@@ -106,6 +127,26 @@ def main(argv=None) -> int:
                 json.dumps({"results": results, "summary": summary},
                            indent=1, default=float))
             print()
+        if sweep_walls or batch_wall is not None:
+            # wall-clock record per engine: running once with each of
+            # --engine des / --engine jax leaves a comparable pair in
+            # artifacts/ (see sweep/README.md "Performance").  The DES
+            # path times each workload; the jax path runs one shared
+            # batch, so only the batch total is real.
+            timing_path = ARTIFACTS / f"sweep-timing-{args.engine}.json"
+            timing = {"engine": args.engine, "scale": args.scale,
+                      "seeds": args.seeds}
+            if batch_wall is not None:
+                timing["batch_workloads"] = to_run
+                timing["total_s"] = batch_wall
+                timing["engine_info"] = {
+                    n: all_results[n].get("_engine", {}) for n in to_run}
+            else:
+                timing["workloads"] = sweep_walls
+                timing["total_s"] = sum(sweep_walls.values())
+            timing_path.write_text(json.dumps(timing, indent=1,
+                                              default=float))
+            print(f"[sweep] wall-clock record -> {timing_path}")
 
     print("#" * 72)
     print("# Roofline — BASELINE (paper-faithful + naive distribution)")

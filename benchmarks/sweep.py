@@ -190,7 +190,11 @@ def main(argv=None):
                     help="des: looped numpy reference; jax: batched "
                          "device-resident engine (repro.sweep)")
     ap.add_argument("--crosscheck", type=int, default=0,
-                    help="[jax] re-run N sampled cells through the DES")
+                    help="[jax] re-run N sampled cells through the DES; "
+                         "cells are drawn from a seeded RNG so reruns "
+                         "check the same cells")
+    ap.add_argument("--crosscheck-seed", type=int, default=0,
+                    help="[jax] RNG seed for crosscheck cell sampling")
     ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
                     help="[jax] per-cell result cache ('' disables)")
     ap.add_argument("--compare-engines", action="store_true",
@@ -222,7 +226,9 @@ def main(argv=None):
         results = jax_runner.sweep_workload_jax(
             args.workload, scale=args.scale, seeds=args.seeds,
             proportions=tuple(args.proportions),
-            crosscheck=args.crosscheck, cache_dir=args.cache_dir or None)
+            crosscheck=args.crosscheck,
+            crosscheck_seed=args.crosscheck_seed,
+            cache_dir=args.cache_dir or None)
     else:
         results = sweep_workload(args.workload, scale=args.scale,
                                  seeds=args.seeds,

@@ -1,130 +1,13 @@
 """Shrink/expand node redistribution (paper §2.1, Steps 2 and 3).
 
-All functions are pure, vectorized and ``xp``-agnostic: pass ``numpy`` (the
-fast-path DES) or ``jax.numpy`` (the jittable simulator, the elastic-training
-manager).  They operate on parallel arrays over the *running malleable* jobs.
-
-Two families:
-
-  * greedy_*   — MIN / PREF / KEEPPREF semantics: touch the smallest number
-                 of jobs needed, in priority order.
-  * balanced_* — AVG semantics: move every job toward a common relative
-                 utilization level (Eq. 3), via a fixed-iteration bisection
-                 on the level (jit-friendly: no data-dependent loops).
-
-Invariants (property-tested):
-  floor <= new_alloc <= cap elementwise; total freed >= need when feasible;
-  no job is expanded during a shrink call or shrunk during an expand call.
+Compatibility shim: the implementations moved to :mod:`repro.core.passes`,
+the single source of scheduling-policy truth shared by all three
+simulators.  Import from there in new code.
 """
 from __future__ import annotations
 
-import numpy as np
+from .passes import (balanced_expand, balanced_shrink, greedy_expand,
+                     greedy_shrink)
 
-_BISECT_ITERS = 24  # 2^-24 level resolution; exact after integer rounding
-                    # (max span handled exactly: 2^24 >> any cluster size)
-
-
-def _stable_argsort(key, xp):
-    # numpy needs kind="stable"; jax.numpy argsort is stable by default.
-    if xp is np:
-        return np.argsort(key, kind="stable")
-    return xp.argsort(key)
-
-
-def greedy_shrink(alloc, floor, priority, need, xp=np):
-    """Shrink jobs to ``floor`` in descending priority until >= need freed.
-
-    Returns the new allocation array.  Shrinks the *smallest number of jobs*:
-    jobs are fully lowered to floor in priority order; the marginal job is
-    lowered only as far as needed.  If total surplus < need, frees what it can.
-    """
-    alloc = xp.asarray(alloc)
-    surplus = xp.maximum(alloc - floor, 0)
-    order = _stable_argsort(-xp.asarray(priority), xp)
-    s_sorted = surplus[order]
-    cum = xp.cumsum(s_sorted)
-    target = xp.minimum(xp.asarray(need, dtype=cum.dtype), cum[-1] if cum.shape[0] else 0)
-    prev = cum - s_sorted
-    amt_sorted = xp.clip(target - prev, 0, s_sorted)
-    if xp is np:
-        amt = np.empty_like(np.asarray(s_sorted))
-        amt[np.asarray(order)] = amt_sorted
-    else:
-        amt = xp.zeros_like(s_sorted).at[order].set(amt_sorted)
-    return alloc - amt.astype(alloc.dtype)
-
-
-def greedy_expand(alloc, cap, priority, idle, xp=np):
-    """Expand jobs to ``cap`` in ascending priority until idle exhausted."""
-    alloc = xp.asarray(alloc)
-    room = xp.maximum(cap - alloc, 0)
-    order = _stable_argsort(xp.asarray(priority), xp)
-    r_sorted = room[order]
-    cum = xp.cumsum(r_sorted)
-    target = xp.minimum(xp.asarray(idle, dtype=cum.dtype), cum[-1] if cum.shape[0] else 0)
-    prev = cum - r_sorted
-    amt_sorted = xp.clip(target - prev, 0, r_sorted)
-    if xp is np:
-        amt = np.empty_like(np.asarray(r_sorted))
-        amt[np.asarray(order)] = amt_sorted
-    else:
-        amt = xp.zeros_like(r_sorted).at[order].set(amt_sorted)
-    return alloc + amt.astype(alloc.dtype)
-
-
-def _level_targets(level, mn, mx, xp):
-    """Integer allocation at relative level ``level`` in [0, 1]."""
-    span = (mx - mn) * 1.0  # promote to the backend's default float
-    return mn + xp.floor(level * span + 1e-9).astype(mn.dtype)
-
-
-def balanced_shrink(alloc, mn, mx, need, xp=np):
-    """AVG shrink: lower all jobs toward a common relative level.
-
-    Finds the largest level ``r`` such that shrinking every job to
-    ``min(alloc, mn + r (mx - mn))`` frees at least ``need`` nodes, then
-    returns excess (integer-rounding) capacity back to the jobs shrunk the
-    deepest, so exactly ``min(need, freeable)`` is freed.
-    """
-    alloc = xp.asarray(alloc)
-    freeable = xp.sum(xp.maximum(alloc - mn, 0))
-    need_eff = xp.minimum(xp.asarray(need, dtype=freeable.dtype), freeable)
-
-    lo = xp.zeros(()); hi = xp.ones(())
-    for _ in range(_BISECT_ITERS):
-        mid = 0.5 * (lo + hi)
-        t = xp.minimum(alloc, _level_targets(mid, mn, mx, xp))
-        freed = xp.sum(alloc - t)
-        ok = freed >= need_eff           # level low enough to free need
-        lo = xp.where(ok, mid, lo)
-        hi = xp.where(ok, hi, mid)
-    t = xp.minimum(alloc, _level_targets(lo, mn, mx, xp))
-    freed = xp.sum(alloc - t)
-    # Return integer-rounding excess to the most-shrunk jobs (largest delta).
-    excess = freed - need_eff
-    delta = alloc - t
-    giveback = greedy_expand(t, alloc, -delta, excess, xp=xp)
-    return giveback
-
-
-def balanced_expand(alloc, mn, mx, idle, xp=np):
-    """AVG expand: raise all jobs toward a common relative level."""
-    alloc = xp.asarray(alloc)
-    room = xp.sum(xp.maximum(mx - alloc, 0))
-    idle_eff = xp.minimum(xp.asarray(idle, dtype=room.dtype), room)
-
-    lo = xp.zeros(()); hi = xp.ones(())
-    for _ in range(_BISECT_ITERS):
-        mid = 0.5 * (lo + hi)
-        t = xp.maximum(alloc, xp.minimum(_level_targets(mid, mn, mx, xp), mx))
-        used = xp.sum(t - alloc)
-        ok = used <= idle_eff
-        lo = xp.where(ok, mid, lo)
-        hi = xp.where(ok, hi, mid)
-    t = xp.maximum(alloc, xp.minimum(_level_targets(lo, mn, mx, xp), mx))
-    used = xp.sum(t - alloc)
-    # Hand out the remaining few nodes to the least-utilized jobs first.
-    leftover = idle_eff - used
-    span = xp.maximum(mx - mn, 1)
-    balance = (t - mn) / span
-    return greedy_expand(t, mx, balance, leftover, xp=xp)
+__all__ = ["balanced_expand", "balanced_shrink", "greedy_expand",
+           "greedy_shrink"]

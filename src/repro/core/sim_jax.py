@@ -2,18 +2,21 @@
 
 This is the paper's scheduling technique expressed as a composable JAX
 module: fixed-size job arrays, one scan step per tick, and the exact same
-strategy math (:mod:`repro.core.strategies`, :mod:`repro.core.redistribute`)
-as the numpy reference DES.  Because every step is pure and fixed-shape it
+scheduling passes (:func:`repro.core.passes.schedule_tick`) as the batched
+sweep engine — this module is the dense-per-tick *driver* around the shared
+policy core, nothing more.  Because every step is pure and fixed-shape it
 can be jitted, vmapped over seeds/proportions, and differentiated through
 (the speedup model is smooth in the allocation).
 
-Fidelity differences vs. the reference DES (``simulator.py``), documented and
-property-tested:
+Fidelity differences vs. the reference DES (``simulator.py``), documented
+and property-tested:
 
   * completions are quantized to tick boundaries (the DES completes jobs at
     exact event times);
-  * EASY-backfill is approximated by an FCFS-prefix pass followed by a
-    smallest-job-first fill pass (no head-reservation shadow time);
+  * EASY backfill uses the shared vectorized shadow-time reservation
+    (:func:`repro.core.passes.shadow_reservation`): candidates start in
+    cumulative-fit rounds rather than the DES's sequential first-fit scan,
+    but the reserved queue head is never delayed — same as the DES;
   * Step 2 shrink is applied once per tick rather than to fixpoint — the
     schedule converges over subsequent ticks (the JAX engine runs *every*
     tick, so the paper's tick semantics still hold).
@@ -23,7 +26,6 @@ sweeps, property tests and the elastic-training manager.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple, Sequence, Tuple
 
@@ -32,11 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
-from .redistribute import (balanced_expand, balanced_shrink, greedy_expand,
-                           greedy_shrink)
+from .passes import (PassParams, _speedup_f32 as _speedup, schedule_tick,
+                     start_policies)
 from .strategies import Strategy
-
-_INF = jnp.float32(jnp.inf)
 
 
 class JobArrays(NamedTuple):
@@ -44,6 +44,7 @@ class JobArrays(NamedTuple):
 
     submit: jax.Array      # f32 (n,)
     runtime: jax.Array     # f32 (n,)
+    walltime: jax.Array    # f32 (n,) reservation estimates use this
     nodes_req: jax.Array   # i32 (n,)
     malleable: jax.Array   # bool (n,)
     min_nodes: jax.Array   # i32 (n,)
@@ -60,6 +61,7 @@ class JobArrays(NamedTuple):
         return JobArrays(
             submit=jnp.asarray(w.submit, jnp.float32),
             runtime=jnp.asarray(w.runtime, jnp.float32),
+            walltime=jnp.asarray(w.walltime, jnp.float32),
             nodes_req=jnp.asarray(w.nodes_req, jnp.int32),
             malleable=jnp.asarray(w.malleable, jnp.bool_),
             min_nodes=jnp.asarray(w.min_nodes, jnp.int32),
@@ -90,62 +92,6 @@ class SimTrace(NamedTuple):
     queue_len: jax.Array   # i32 (T,)
 
 
-def _speedup(n, p):
-    n = jnp.maximum(n.astype(jnp.float32), 1.0)
-    return 1.0 / ((1.0 - p) + p / n)
-
-
-def _start_policy(jobs: JobArrays, which: str) -> jax.Array:
-    arr = {"min": jobs.min_nodes, "pref": jobs.pref_nodes,
-           "req": jobs.nodes_req}[which]
-    return jnp.where(jobs.malleable, arr, jobs.nodes_req)
-
-
-def _fcfs_prefix_start(state, alloc, start_t, want, floor, rank, free, t):
-    """Start the FCFS prefix of the queue; head may fall back to ``floor``."""
-    queued = state == QUEUED
-    key = jnp.where(queued, rank, jnp.int32(jnp.iinfo(jnp.int32).max))
-    order = jnp.argsort(key)
-    w_sorted = jnp.where(queued[order], want[order], 0)
-    cum = jnp.cumsum(w_sorted)
-    start_sorted = queued[order] & (cum <= free)
-    started = jnp.zeros_like(queued).at[order].set(start_sorted)
-    used = jnp.sum(jnp.where(started, want, 0))
-    # head fallback: first queued job not started, floor fits in leftover
-    leftover = free - used
-    not_started_q = queued & ~started
-    headkey = jnp.where(not_started_q, rank, jnp.int32(jnp.iinfo(jnp.int32).max))
-    head = jnp.argmin(headkey)
-    head_ok = not_started_q[head] & (floor[head] <= leftover)
-    head_alloc = jnp.clip(leftover, floor[head], want[head])
-    alloc = jnp.where(started, want, alloc)
-    alloc = alloc.at[head].set(jnp.where(head_ok, head_alloc, alloc[head]))
-    started = started.at[head].set(started[head] | head_ok)
-    state = jnp.where(started, RUNNING, state)
-    start_t = jnp.where(started, t, start_t)
-    return state, alloc, start_t
-
-
-def _smallest_fill_start(state, alloc, start_t, want, floor, rank, free, t):
-    """Backfill-lite: smallest-first fill of remaining queued jobs.
-
-    Sorted by the composite key (floor, rank) so equal-size queued jobs
-    backfill in FCFS order.
-    """
-    queued = state == QUEUED
-    big = jnp.int32(jnp.iinfo(jnp.int32).max)
-    order = jnp.lexsort((jnp.where(queued, rank, big),
-                         jnp.where(queued, floor, big)))
-    f_sorted = jnp.where(queued[order], floor[order], 0)
-    cum = jnp.cumsum(f_sorted)
-    start_sorted = queued[order] & (cum <= free)
-    started = jnp.zeros_like(queued).at[order].set(start_sorted)
-    state = jnp.where(started, RUNNING, state)
-    alloc = jnp.where(started, floor, alloc)
-    start_t = jnp.where(started, t, start_t)
-    return state, alloc, start_t
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("strategy", "capacity", "tick", "n_ticks"),
@@ -159,11 +105,24 @@ def simulate_scan(
 ) -> Tuple[SimState, SimTrace]:
     """Run ``n_ticks`` scheduler ticks; returns final state + per-tick trace."""
     n = jobs.submit.shape[0]
-    want = _start_policy(jobs, strategy.start_want if strategy.malleable else "req")
-    floor = _start_policy(jobs, strategy.start_floor if strategy.malleable else "req")
-    shrink_floor = _start_policy(
-        jobs, strategy.shrink_floor if strategy.malleable else "req")
-    s_ref = _speedup(jobs.nodes_req, jobs.pfrac)
+    # The shared passes want slots in FCFS order: simulate in submit-rank
+    # order and scatter results back to the caller's job order at the end.
+    order = jnp.argsort(jobs.rank)
+    sj = JobArrays(*[a[order] for a in jobs])
+    want, floor, sfloor, prio_ref = start_policies(
+        strategy, sj.malleable, sj.min_nodes, sj.pref_nodes, sj.nodes_req,
+        xp=jnp)
+    s_ref = _speedup(sj.nodes_req, sj.pfrac)
+    params = PassParams(
+        malleable=sj.malleable & bool(strategy.malleable),
+        min_nodes=sj.min_nodes, max_nodes=sj.max_nodes,
+        want=want, floor=floor, shrink_floor=sfloor, prio_ref=prio_ref,
+        pfrac=sj.pfrac, wall_work=sj.walltime * s_ref,
+    )
+    # conservative static pass bounds: every allocation and priority
+    # reference lies within a few multiples of the cluster size
+    prio_lo, prio_hi = -4 * int(capacity), 4 * int(capacity)
+    span_max = 4 * int(capacity)
 
     init = SimState(
         state=jnp.full((n,), PENDING, jnp.int32),
@@ -179,7 +138,7 @@ def simulate_scan(
         t = (k.astype(jnp.float32) + 1.0) * tick  # schedule at end of tick k
         # 1. progress running jobs over this tick
         running = st.state == RUNNING
-        rate = _speedup(st.alloc, jobs.pfrac) / (s_ref * jobs.runtime)
+        rate = _speedup(st.alloc, sj.pfrac) / (s_ref * sj.runtime)
         remaining = jnp.where(running, st.remaining - tick * rate, st.remaining)
         # 2. completions (quantized to tick end)
         done_now = running & (remaining <= 1e-6)
@@ -188,68 +147,19 @@ def simulate_scan(
         alloc = jnp.where(done_now, 0, st.alloc)
         remaining = jnp.where(done_now, 0.0, remaining)
         # 3. arrivals
-        arrived = (state == PENDING) & (jobs.submit <= t)
+        arrived = (state == PENDING) & (sj.submit <= t)
         state = jnp.where(arrived, QUEUED, state)
 
         running0 = state == RUNNING
         alloc0 = alloc
 
-        # 4a. Step 1: FCFS prefix + smallest-first fill
-        free = capacity - jnp.sum(jnp.where(running0, alloc, 0))
-        state, alloc, start_t = _fcfs_prefix_start(
-            state, alloc, st.start_t, want, floor, jobs.rank, free, t)
-        free = capacity - jnp.sum(jnp.where(state == RUNNING, alloc, 0))
-        state, alloc, start_t = _smallest_fill_start(
-            state, alloc, start_t, want, floor, jobs.rank, free, t)
-
-        if strategy.malleable:
-            # 4b. Step 2: one shrink round for the blocked head
-            queued = state == QUEUED
-            headkey = jnp.where(queued, jobs.rank,
-                                jnp.int32(jnp.iinfo(jnp.int32).max))
-            head = jnp.argmin(headkey)
-            any_queued = jnp.any(queued)
-            free = capacity - jnp.sum(jnp.where(state == RUNNING, alloc, 0))
-            deficit = jnp.where(any_queued, floor[head] - free, 0)
-
-            shrinkable = (state == RUNNING) & jobs.malleable
-            fl = jnp.where(shrinkable,
-                           jnp.minimum(shrink_floor, alloc), alloc)
-            surplus = jnp.sum(alloc - fl)
-            need = jnp.where((deficit > 0) & (surplus >= deficit), deficit, 0)
-            if strategy.balanced:
-                mn_eff = jnp.where(shrinkable, fl, alloc)
-                mx_eff = jnp.where(shrinkable, jobs.max_nodes, alloc)
-                new_alloc = balanced_shrink(alloc, mn_eff, mx_eff, need, xp=jnp)
-            else:
-                pr = strategy.priority(alloc, jobs.min_nodes, jobs.max_nodes,
-                                       jobs.pref_nodes, jnp)
-                new_alloc = greedy_shrink(alloc, fl, pr, need, xp=jnp)
-            alloc = new_alloc.astype(alloc.dtype)
-            # start the head if it now fits
-            free = capacity - jnp.sum(jnp.where(state == RUNNING, alloc, 0))
-            head_ok = any_queued & (floor[head] <= free)
-            ha = jnp.clip(free, floor[head], want[head])
-            alloc = alloc.at[head].set(jnp.where(head_ok, ha, alloc[head]))
-            state = state.at[head].set(
-                jnp.where(head_ok, RUNNING, state[head]))
-            start_t = start_t.at[head].set(
-                jnp.where(head_ok, t, start_t[head]))
-
-            # 4c. Step 3: expand into remaining idle nodes
-            free = capacity - jnp.sum(jnp.where(state == RUNNING, alloc, 0))
-            expandable = (state == RUNNING) & jobs.malleable
-            cap = jnp.where(expandable, jobs.max_nodes, alloc)
-            if strategy.balanced:
-                mn_eff = jnp.where(expandable, jobs.min_nodes, alloc)
-                alloc = balanced_expand(alloc, mn_eff, cap,
-                                        jnp.maximum(free, 0), xp=jnp)
-            else:
-                pr = strategy.priority(alloc, jobs.min_nodes, jobs.max_nodes,
-                                       jobs.pref_nodes, jnp)
-                alloc = greedy_expand(alloc, cap, pr,
-                                      jnp.maximum(free, 0), xp=jnp)
-            alloc = alloc.astype(st.alloc.dtype)
+        # 4. shared Steps 1-3 scheduling pass (policy core)
+        state, alloc, start_t = schedule_tick(
+            params, state, alloc, remaining, st.start_t, True,
+            jnp.int32(capacity), t,
+            balanced=bool(strategy.malleable and strategy.balanced),
+            fill_rounds=2, prio_lo=prio_lo, prio_hi=prio_hi,
+            span_max=span_max)
 
         # 5. net per-tick op accounting (jobs running before & after)
         still = running0 & (state == RUNNING)
@@ -264,6 +174,7 @@ def simulate_scan(
         return new, (busy.astype(jnp.int32), qlen.astype(jnp.int32))
 
     final, (busy, qlen) = jax.lax.scan(init=init, xs=jnp.arange(n_ticks), f=step)
+    final = SimState(*[a[jobs.rank] for a in final])  # back to caller order
     return final, SimTrace(busy=busy, queue_len=qlen)
 
 

@@ -31,8 +31,10 @@ import numpy as np
 
 from .cluster import Cluster
 from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
-from .redistribute import (balanced_expand, balanced_shrink, greedy_expand,
-                           greedy_shrink)
+from .passes import (balanced_expand, balanced_shrink,
+                     easy_backfill_scan_exact, easy_reservation_exact,
+                     fcfs_prefix_exact, greedy_expand, greedy_shrink,
+                     start_policies)
 from .speedup import amdahl_speedup
 from .strategies import Strategy
 
@@ -109,19 +111,11 @@ class Simulator:
         self.dense_ticks = dense_ticks  # force per-tick scheduling (tests)
         w = workload
         self._s_ref = amdahl_speedup(w.nodes_req, w.pfrac)
-        # Static per-job start policies (paper §2.1 Step 1).
-        if strategy.malleable:
-            def pick(which):
-                arr = {"min": w.min_nodes, "pref": w.pref_nodes,
-                       "req": w.nodes_req}[which]
-                return np.where(w.malleable, arr, w.nodes_req)
-            self._start_want = pick(strategy.start_want)
-            self._start_floor = pick(strategy.start_floor)
-            self._shrink_floor = pick(strategy.shrink_floor)
-        else:
-            self._start_want = w.nodes_req.copy()
-            self._start_floor = w.nodes_req.copy()
-            self._shrink_floor = w.nodes_req.copy()
+        # Static per-job start policies (paper §2.1 Step 1), shared with
+        # the vectorized engines via the policy core.
+        (self._start_want, self._start_floor,
+         self._shrink_floor, _) = start_policies(
+            strategy, w.malleable, w.min_nodes, w.pref_nodes, w.nodes_req)
         # est remaining duration at alloc a = remaining * _wall_work / S(a)
         self._wall_work = w.walltime * self._s_ref
 
@@ -211,16 +205,13 @@ class Simulator:
             sched_changed = True
 
         def start_pass() -> None:
-            nonlocal busy
-            # greedy FCFS prefix
-            while queue:
-                j = queue[0]
-                free = cl.nodes - busy
-                if start_floor[j] <= free:
-                    do_start(j, int(min(start_want[j], free)))
-                    queue.popleft()
-                else:
-                    break
+            # greedy FCFS prefix (policy core: exact first-fit order)
+            head_jobs = list(queue)
+            prefix, _ = fcfs_prefix_exact(start_want[head_jobs],
+                                          start_floor[head_jobs],
+                                          cl.nodes - busy)
+            for a in prefix:
+                do_start(queue.popleft(), a)
             if not queue:
                 return
             # head blocked: single EASY reservation + bounded backfill scan
@@ -231,36 +222,17 @@ class Simulator:
             if len(ids) == 0:
                 return  # unreachable: head always fits an empty cluster
             ests = t + self._est_duration(ids, alloc[ids], remaining[ids])
-            srt = np.argsort(ests, kind="stable")
-            cumfree = free + np.cumsum(alloc[ids][srt])
-            k = int(np.searchsorted(cumfree, floor_h))
-            k = min(k, len(ids) - 1)
-            shadow = float(ests[srt][k])
-            extra = int(cumfree[k]) - floor_h
-
-            started = []
-            for j in list(queue)[1 : 1 + self.backfill_depth]:
-                free = cl.nodes - busy
-                if free == 0:
-                    break
-                floor_j = int(start_floor[j])
-                if floor_j > free:
-                    continue
-                want_j = int(start_want[j])
-                for a_try in dict.fromkeys([min(want_j, free), floor_j]):
-                    s = amdahl_speedup(float(a_try), pfrac[j])
-                    est = wall_work[j] / s
-                    if t + est <= shadow + _EPS:
-                        pass  # finishes before the reservation
-                    elif a_try <= extra:
-                        extra -= a_try  # runs past shadow inside spare nodes
-                    else:
-                        continue
-                    do_start(j, a_try)
-                    started.append(j)
-                    break
-            if started:
-                sset = set(started)
+            shadow, extra = easy_reservation_exact(ests, alloc[ids], free,
+                                                   floor_h)
+            cands = np.asarray(list(queue)[1 : 1 + self.backfill_depth],
+                               dtype=np.int64)
+            starts, _, _ = easy_backfill_scan_exact(
+                start_want[cands], start_floor[cands], wall_work[cands],
+                pfrac[cands], t, shadow, extra, free, eps=_EPS)
+            if starts:
+                for i, a in starts:
+                    do_start(int(cands[i]), int(a))
+                sset = {int(cands[i]) for i, _ in starts}
                 remain = [j for j in queue if j not in sset]
                 queue.clear()
                 queue.extend(remain)

@@ -6,13 +6,13 @@
 # - cache:       content-hash on-disk result cache (skip completed cells)
 # - runner:      grid orchestration, seed aggregation, DES crosscheck, CLI
 from .batch import (BatchedLanes, EngineConfig, SweepEngineError,
-                    build_lanes, simulate_lanes)
+                    build_lanes, concat_lanes, simulate_lanes)
 from .cache import SweepCache, cell_fingerprint
 from .metrics_jax import batched_metrics
-from .runner import sweep_workload_jax
+from .runner import sweep_workload_jax, sweep_workloads_jax
 
 __all__ = [
     "BatchedLanes", "EngineConfig", "SweepEngineError", "build_lanes",
-    "simulate_lanes", "SweepCache", "cell_fingerprint", "batched_metrics",
-    "sweep_workload_jax",
+    "concat_lanes", "simulate_lanes", "SweepCache", "cell_fingerprint",
+    "batched_metrics", "sweep_workload_jax", "sweep_workloads_jax",
 ]

@@ -1,8 +1,11 @@
 """Event-stepped batched scheduling engine for sweep grids.
 
-Evaluates many (strategy-policy, proportion, seed) *lanes* of the paper's
-sweep in lockstep on one device.  Three structural ideas make a batched
-malleable-scheduling simulation fast on real hardware:
+Evaluates many (strategy-policy, proportion, seed — and, since engine v2,
+*workload/cluster*) lanes of the paper's sweep in lockstep on one device.
+The scheduling passes themselves (Steps 1-3, EASY shadow-time backfill,
+greedy/balanced shrink-expand) live in :mod:`repro.core.passes` — the
+single policy core shared with the numpy DES and the dense-tick
+``sim_jax`` engine.  This module owns only the simulation substrate:
 
 1. **Event-quantized steps, not ticks.**  Like the reference DES
    (``core/simulator.py``), scheduler state only changes on the first tick
@@ -21,22 +24,12 @@ malleable-scheduling simulation fast on real hardware:
    its last prefetched arrival freezes until the next compaction; if no lane
    can advance at all the driver escalates to a 2x window and recompiles.
 
-3. **Sort-free scheduling passes.**  Every per-step pass is built from
-   cumulative sums and integer threshold bisection — no ``argsort`` inside
-   the hot loop (an XLA CPU sort costs more than an entire scheduling pass):
-
-   * Step 1 FCFS prefix: masked cumsum over ``want`` in slot order + the
-     head fallback to ``floor``.
-   * Backfill fill pass: ``fill_rounds`` rounds of FCFS-ordered floor
-     fill, each round skipping jobs larger than the free pool (approximates
-     EASY's skip-over backfill scan; no shadow-time reservation — the same
-     documented "backfill-lite" caveat as ``sim_jax``).
-   * Step 2/3 greedy shrink/expand: descending/ascending priority prefix
-     waterfill via bisection on the integer priority threshold, with the
-     marginal priority class taken partially in slot (FCFS) order.
-   * AVG's balanced variant: the same fixed-iteration level bisection as
-     ``core/redistribute.py`` with the integer-rounding give-back routed
-     through the threshold waterfill.
+3. **Multi-trace padded batching.**  ``capacity`` and ``tick`` are per-lane
+   *data* and shorter traces are padded with never-arriving jobs
+   (:func:`concat_lanes`), so lanes of *different* workloads and clusters
+   stack into one batch and a single compilation serves all four
+   supercomputer grids.  Per-lane results are bit-identical to running each
+   workload's batch alone (padding contributes zeros to every reduction).
 
 Strategy *structure* is static per compiled engine (greedy vs. balanced);
 strategy *parameters* (start want/floor, shrink floor, priority reference)
@@ -44,17 +37,19 @@ are data, so EASY/MIN/PREF/KEEPPREF lanes share one compilation and one
 batch.
 
 Fidelity vs. the reference DES (documented in ``sweep/README.md``):
-completions and starts quantized to tick boundaries; backfill-lite (no
-shadow reservation); shrink/expand tie-break in FCFS order rather than the
-DES running-set insertion order; scheduling converges over subsequent ticks
-instead of an in-tick fixpoint.  ``runner.py --crosscheck`` quantifies the
-resulting metric deltas against the DES per cell.
+completions and starts quantized to tick boundaries; EASY backfill honours
+the head's shadow-time reservation (:func:`repro.core.passes.
+shadow_reservation`) but fills candidates in cumulative rounds rather than
+the DES's sequential first-fit scan; shrink/expand tie-break in FCFS order
+rather than the DES running-set insertion order; scheduling converges over
+subsequent ticks instead of an in-tick fixpoint.  ``runner.py
+--crosscheck`` quantifies the resulting metric deltas against the DES per
+cell.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Dict, List, NamedTuple, Sequence, Tuple
 
 import jax
@@ -62,12 +57,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.jobs import DONE, PENDING, QUEUED, RUNNING, Workload
+from repro.core.passes import PassParams, schedule_tick, start_policies
 from repro.core.speedup import (TransformConfig, amdahl_speedup,
                                 batched_malleable_params)
-from repro.core.strategies import Strategy, priority_min
+from repro.core.strategies import Strategy
 
 # Bump when engine semantics change: invalidates sweep-cache entries.
-ENGINE_VERSION = 1
+# v2: shadow-time EASY backfill (head reservation) via the shared policy
+# core; per-lane capacity/tick; multi-trace padded batching.
+ENGINE_VERSION = 2
 
 _TICK_EPS = 1e-6   # ceil guard, matches the DES event quantization
 _REM_EPS = 1e-5    # remaining-work completion threshold (fraction of job)
@@ -78,24 +76,27 @@ class SweepEngineError(RuntimeError):
 
 
 class BatchedLanes(NamedTuple):
-    """Fixed-shape lane batch: one lane per (strategy-policy, prop, seed).
+    """Fixed-shape lane batch: one lane per (workload, strategy, prop, seed).
 
     Jobs are pre-sorted by submission time so array index == FCFS rank.
-    ``submit`` and ``runtime`` are shared across lanes (the sweep reuses one
-    trace); everything else is per-lane data.
+    Padding slots (from :func:`concat_lanes`) carry ``submit == +inf`` and
+    never arrive.  ``capacity``/``tick`` are per-lane so lanes of different
+    clusters share one compilation.
     """
 
-    submit: jax.Array        # f32 (n,) ascending
-    runtime: jax.Array       # f32 (n,) reference runtime (shared)
+    submit: jax.Array        # f32 (B, n) ascending; +inf on padding
     malleable: jax.Array     # bool (B, n)
     min_nodes: jax.Array     # i32 (B, n)
     max_nodes: jax.Array     # i32 (B, n)
     pfrac: jax.Array         # f32 (B, n)
     inv_ref: jax.Array       # f32 (B, n): 1 / (S(nodes_req) * runtime)
+    wall_work: jax.Array     # f32 (B, n): walltime * S(nodes_req)
     want: jax.Array          # i32 (B, n) start-pass target allocation
     floor: jax.Array         # i32 (B, n) smallest start allocation
     shrink_floor: jax.Array  # i32 (B, n) smallest Step-2 allocation
     prio_ref: jax.Array      # i32 (B, n): greedy priority = alloc - prio_ref
+    capacity: jax.Array      # i32 (B,) cluster nodes of the lane
+    tick: jax.Array          # f32 (B,) scheduling granularity of the lane
 
     @property
     def n_lanes(self) -> int:
@@ -108,14 +109,13 @@ class BatchedLanes(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    capacity: int
-    tick: float
     balanced: bool = False    # AVG lanes (balanced redistribution)
     window: int = 0           # starting active-set slots; 0 = auto
     chunk: int = 160          # scan steps between compactions
-    fill_rounds: int = 2      # FCFS skip-fill rounds per scheduling pass
+    fill_rounds: int = 2      # shadow-backfill fill rounds per pass
     reserve_slack: int = 64   # min arrival-prefetch slots kept in the window
     max_steps_factor: int = 16  # step budget = factor * n_jobs + 2048
+    expand_backend: str = "bisect"  # bisect | pallas | pallas-interpret
 
 
 def build_lanes(
@@ -123,6 +123,7 @@ def build_lanes(
     cluster_nodes: int,
     lanes: Sequence[Tuple[Strategy, float, int]],
     config: TransformConfig = TransformConfig(),
+    tick: float = 1.0,
 ) -> Tuple[BatchedLanes, np.ndarray]:
     """Stack (strategy, proportion, seed) lanes into device arrays.
 
@@ -149,77 +150,58 @@ def build_lanes(
     sfloor = np.empty_like(req)
     prio_ref = np.empty_like(req)
     for b, (strat, _, _) in enumerate(lanes):
-        if strat.malleable:
-            def pick(which):
-                return strat.pick(which, mn[b], pref[b], req[b])
-            want[b] = np.where(mall[b], pick(strat.start_want), req[b])
-            floor[b] = np.where(mall[b], pick(strat.start_floor), req[b])
-            sfloor[b] = np.where(mall[b], pick(strat.shrink_floor), req[b])
-            # greedy priority = alloc - reference (Eqs. 1-2); AVG's Eq. 3
-            # is handled by the balanced engine structure instead
-            prio_ref[b] = pick(
-                "min" if strat.priority is priority_min else "pref")
-        else:
+        if not strat.malleable:
             mall[b] = False
             mn[b] = mx[b] = req[b]
-            want[b] = floor[b] = sfloor[b] = req[b]
-            prio_ref[b] = req[b]
+        want[b], floor[b], sfloor[b], prio_ref[b] = start_policies(
+            strat, mall[b], mn[b], pref[b], req[b])
 
     s_ref = amdahl_speedup(req, pfrac)
     batch = BatchedLanes(
-        submit=jnp.asarray(w.submit, jnp.float32),
-        runtime=jnp.asarray(w.runtime, jnp.float32),
+        submit=jnp.asarray(np.tile(w.submit, (B, 1)), jnp.float32),
         malleable=jnp.asarray(mall),
         min_nodes=jnp.asarray(mn, jnp.int32),
         max_nodes=jnp.asarray(mx, jnp.int32),
         pfrac=jnp.asarray(pfrac, jnp.float32),
         inv_ref=jnp.asarray(1.0 / (s_ref * w.runtime[None, :]), jnp.float32),
+        wall_work=jnp.asarray(w.walltime[None, :] * s_ref, jnp.float32),
         want=jnp.asarray(want, jnp.int32),
         floor=jnp.asarray(floor, jnp.int32),
         shrink_floor=jnp.asarray(sfloor, jnp.int32),
         prio_ref=jnp.asarray(prio_ref, jnp.int32),
+        capacity=jnp.full((B,), int(cluster_nodes), jnp.int32),
+        tick=jnp.full((B,), float(tick), jnp.float32),
     )
     return batch, order
 
 
-# ----------------------------------------------------------------------
-# Sort-free prefix waterfills (Step 2/3): bisect the priority threshold,
-# then take the marginal class partially in slot (FCFS) order.
-def _take_desc_prefix(prio, amount, need, lo0: int, hi0: int):
-    """Per-slot take with sum == min(need, sum(amount)), highest-prio first.
+def concat_lanes(batches: Sequence[BatchedLanes]) -> BatchedLanes:
+    """Concatenate lane batches of *different* workloads into one batch.
 
-    ``lo0``/``hi0`` are static priority bounds: every slot with
-    ``amount > 0`` must satisfy ``lo0 < prio <= hi0``.  Equivalent to
-    ``greedy_shrink``'s take with ties broken in slot order.
+    Shorter traces are right-padded with never-arriving jobs
+    (``submit = +inf``); :func:`simulate_lanes` marks padding DONE at
+    initialization, so it contributes zeros to every masked reduction and
+    per-lane results are bit-identical to the unpadded single-workload run.
     """
-    B = prio.shape[0]
-    lo = jnp.full((B,), lo0, jnp.int32)     # invariant: S(lo) > need or lo0
-    hi = jnp.full((B,), hi0, jnp.int32)     # invariant: S(hi) <= need
-    s_hi = jnp.zeros_like(need)
-    for _ in range(int(math.ceil(math.log2(max(hi0 - lo0, 1)))) + 1):
-        mid = (lo + hi) // 2
-        s = jnp.sum(jnp.where(prio > mid[:, None], amount, 0), axis=-1)
-        ok = s <= need
-        hi = jnp.where(ok, mid, hi)
-        s_hi = jnp.where(ok, s, s_hi)
-        lo = jnp.where(ok, lo, mid)
-    theta = hi  # smallest threshold whose above-take fits within need
-    rem = need - s_hi
-    tie = prio == theta[:, None]
-    before = jnp.cumsum(jnp.where(tie, amount, 0), axis=-1)
-    tie_take = jnp.clip(rem[:, None] - (before - amount), 0, amount)
-    return jnp.where(prio > theta[:, None], amount,
-                     jnp.where(tie, tie_take, 0))
+    n_max = max(b.n_jobs for b in batches)
+    pad_fill = {
+        "submit": jnp.float32(jnp.inf), "malleable": False, "min_nodes": 1, "max_nodes": 1,
+        "pfrac": jnp.float32(0.0), "inv_ref": jnp.float32(1.0),
+        "wall_work": jnp.float32(1.0), "want": 1, "floor": 1,
+        "shrink_floor": 1, "prio_ref": 0,
+    }
 
+    def pad(name, arr, n):
+        if name in ("capacity", "tick") or n == n_max:
+            return arr
+        return jnp.pad(arr, ((0, 0), (0, n_max - n)),
+                       constant_values=pad_fill[name])
 
-def _give_asc_prefix(prio, room, idle, lo0: int, hi0: int):
-    """Per-slot give with sum == min(idle, sum(room)), lowest-prio first."""
-    return _take_desc_prefix(-prio, room, idle, -hi0 - 1, -lo0 + 1)
-
-
-def _level_targets(level, mn, mx):
-    span = (mx - mn).astype(jnp.float32)
-    return mn + jnp.floor(level * span + 1e-9).astype(mn.dtype)
+    return BatchedLanes(*[
+        jnp.concatenate([pad(name, getattr(b, name), b.n_jobs)
+                         for b in batches], axis=0)
+        for name in BatchedLanes._fields
+    ])
 
 
 @jax.jit
@@ -262,10 +244,11 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
         # module-level cache: one trace/compile per static configuration
         return _chunk_fn(cfg, n, B, w, prio_lo, prio_hi, span_max)
 
+    real = jnp.isfinite(batch.submit)  # padding slots are born DONE
     full = dict(
-        state=jnp.full((B, n), PENDING, jnp.int32),
+        state=jnp.where(real, PENDING, DONE).astype(jnp.int32),
         alloc=jnp.zeros((B, n), jnp.int32),
-        remaining=jnp.ones((B, n), jnp.float32),
+        remaining=jnp.where(real, 1.0, 0.0).astype(jnp.float32),
         start_t=jnp.full((B, n), jnp.nan, jnp.float32),
         end_t=jnp.full((B, n), jnp.nan, jnp.float32),
         expand_ops=jnp.zeros((B, n), jnp.int32),
@@ -322,173 +305,17 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
 @functools.lru_cache(maxsize=64)
 def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
               prio_lo: int, prio_hi: int, span_max: int):
-    """Compile the compaction + K-step scan + scatter-back chunk kernel."""
+    """Compile the compaction + K-step scan + scatter-back chunk kernel.
+
+    ``capacity`` and ``tick`` are lane data (fields of the batch), not part
+    of the compile key — one compilation serves every cluster at a given
+    shape, which is what makes the multi-trace batch a single compile.
+    """
     K = cfg.chunk
-    capacity = jnp.int32(cfg.capacity)
-    tick = jnp.float32(cfg.tick)
-    level_iters = int(math.ceil(math.log2(span_max + 2))) + 1
     rows = jnp.arange(B)[:, None]
-    lane = jnp.arange(B)
     INF = jnp.float32(jnp.inf)
 
-    arW = jnp.arange(W)[None, :]
-
-    def first_true(mask):
-        """(head-position mask, any-true) without gathers or scatters."""
-        head = jnp.argmax(mask, axis=-1)
-        return mask & (arW == head[:, None])
-
-    def schedule_pass(bj, bstate, balloc, bstart, t_next, act):
-        """One Steps-1..3 scheduling pass on the window buffer.
-
-        Head bookkeeping uses first-true masks and masked sums instead of
-        per-lane gathers/scatters, and the shrink / expand / extra fill
-        passes are skipped via ``lax.cond`` on whole-batch predicates —
-        both matter: XLA:CPU pays far more for gather/scatter/cumsum
-        kernels than for fused elementwise work.
-        """
-        running = bstate == RUNNING
-        free = capacity - jnp.sum(jnp.where(running, balloc, 0), axis=-1)
-
-        # -- Step 1: FCFS prefix (slots are in FCFS order) ----------------
-        queued = (bstate == QUEUED) & act[:, None]
-        cumw = jnp.cumsum(jnp.where(queued, bj.want, 0), axis=-1)
-        s1 = queued & (cumw <= free[:, None])
-        used = jnp.max(jnp.where(s1, cumw, 0), axis=-1)
-        leftover = free - used
-        # head fallback: first queued job not started, floor fits leftover
-        h_mask = first_true(queued & ~s1)
-        hfloor = jnp.sum(jnp.where(h_mask, bj.floor, 0), axis=-1)
-        hwant = jnp.sum(jnp.where(h_mask, bj.want, 0), axis=-1)
-        h_ok = (hfloor > 0) & (hfloor <= leftover)  # floor >= 1 on real jobs
-        h_alloc = jnp.clip(leftover, hfloor, hwant)
-
-        h_upd = h_mask & h_ok[:, None]
-        started = s1 | h_upd
-        balloc = jnp.where(s1, bj.want, balloc)
-        balloc = jnp.where(h_upd, h_alloc[:, None], balloc)
-        bstate = jnp.where(started, RUNNING, bstate)
-        bstart = jnp.where(started, t_next[:, None], bstart)
-        free = leftover - jnp.where(h_ok, h_alloc, 0)
-
-        # -- backfill-lite: FCFS floor-fill, skipping too-big jobs --------
-        def fill_round(args):
-            bstate, balloc, bstart, free, fits = args
-            cumf = jnp.cumsum(jnp.where(fits, bj.floor, 0), axis=-1)
-            s2 = fits & (cumf <= free[:, None])
-            bstate = jnp.where(s2, RUNNING, bstate)
-            balloc = jnp.where(s2, bj.floor, balloc)
-            bstart = jnp.where(s2, t_next[:, None], bstart)
-            free = free - jnp.max(jnp.where(s2, cumf, 0), axis=-1)
-            return bstate, balloc, bstart, free, fits
-
-        for _ in range(cfg.fill_rounds):
-            fits = (bstate == QUEUED) & act[:, None] & \
-                (bj.floor <= free[:, None])
-            bstate, balloc, bstart, free, _ = jax.lax.cond(
-                jnp.any(fits), fill_round, lambda a: a,
-                (bstate, balloc, bstart, free, fits))
-
-        # -- Step 2: shrink running malleable jobs to admit the head ------
-        h_mask = first_true((bstate == QUEUED) & act[:, None])
-        hfloor = jnp.sum(jnp.where(h_mask, bj.floor, 0), axis=-1)
-        hwant = jnp.sum(jnp.where(h_mask, bj.want, 0), axis=-1)
-        has_head = hfloor > 0
-        deficit = jnp.where(has_head, hfloor - free, 0)
-
-        shrinkable = (bstate == RUNNING) & bj.malleable
-        fl = jnp.where(shrinkable,
-                       jnp.minimum(bj.shrink_floor, balloc), balloc)
-        surplus = jnp.maximum(balloc - fl, 0)
-        tot_surplus = jnp.sum(surplus, axis=-1)
-        need = jnp.where((deficit > 0) & (tot_surplus >= deficit), deficit, 0)
-
-        if cfg.balanced:
-            def shrink(balloc):
-                mn_eff = jnp.where(shrinkable, fl, balloc)
-                mx_eff = jnp.where(shrinkable, bj.max_nodes, balloc)
-                lo = jnp.zeros((B,), jnp.float32)
-                hi = jnp.ones((B,), jnp.float32)
-                freed_lo = tot_surplus
-                for _ in range(level_iters):
-                    mid = 0.5 * (lo + hi)
-                    tgt = jnp.minimum(
-                        balloc, _level_targets(mid[:, None], mn_eff, mx_eff))
-                    freed = jnp.sum(balloc - tgt, axis=-1)
-                    ok = freed >= need
-                    lo = jnp.where(ok, mid, lo)
-                    hi = jnp.where(ok, hi, mid)
-                    freed_lo = jnp.where(ok, freed, freed_lo)
-                tgt = jnp.minimum(
-                    balloc, _level_targets(lo[:, None], mn_eff, mx_eff))
-                # return integer-rounding excess to the most-shrunk jobs
-                delta = balloc - tgt
-                give = _give_asc_prefix(-delta, delta, freed_lo - need,
-                                        -span_max - 1, 0)
-                return balloc - (delta - give)
-        else:
-            def shrink(balloc):
-                prio = balloc - bj.prio_ref
-                return balloc - _take_desc_prefix(prio, surplus, need,
-                                                  prio_lo - 1, prio_hi)
-
-        balloc = jax.lax.cond(jnp.any(need > 0), shrink,
-                              lambda b: b, balloc)
-        free = free + need  # the take sums to exactly `need` by construction
-
-        h_ok = has_head & (hfloor <= free)
-        h_alloc = jnp.clip(free, hfloor, hwant)
-        h_upd = h_mask & h_ok[:, None]
-        balloc = jnp.where(h_upd, h_alloc[:, None], balloc)
-        bstate = jnp.where(h_upd, RUNNING, bstate)
-        bstart = jnp.where(h_upd, t_next[:, None], bstart)
-        free = free - jnp.where(h_ok, h_alloc, 0)
-
-        # -- Step 3: expand into remaining idle nodes ---------------------
-        expandable = (bstate == RUNNING) & bj.malleable
-        idle = jnp.maximum(jnp.where(jnp.any(expandable, axis=-1), free, 0),
-                           0)
-        if cfg.balanced:
-            def expand(balloc):
-                mn_eff = jnp.where(expandable, bj.min_nodes, balloc)
-                cap_eff = jnp.where(expandable, bj.max_nodes, balloc)
-                room_tot = jnp.sum(jnp.maximum(cap_eff - balloc, 0), axis=-1)
-                idle_eff = jnp.minimum(idle, room_tot)
-                lo = jnp.zeros((B,), jnp.float32)
-                hi = jnp.ones((B,), jnp.float32)
-                used_lo = jnp.zeros_like(idle_eff)
-                for _ in range(level_iters):
-                    mid = 0.5 * (lo + hi)
-                    tgt = jnp.maximum(balloc, jnp.minimum(
-                        _level_targets(mid[:, None], mn_eff, cap_eff),
-                        cap_eff))
-                    spent = jnp.sum(tgt - balloc, axis=-1)
-                    ok = spent <= idle_eff
-                    lo = jnp.where(ok, mid, lo)
-                    hi = jnp.where(ok, hi, mid)
-                    used_lo = jnp.where(ok, spent, used_lo)
-                tgt = jnp.maximum(balloc, jnp.minimum(
-                    _level_targets(lo[:, None], mn_eff, cap_eff), cap_eff))
-                # hand the leftover to the least-utilized jobs (2^-16 levels)
-                span = jnp.maximum(cap_eff - mn_eff, 1)
-                balance_q = ((tgt - mn_eff) * 65536) // span
-                room = jnp.maximum(cap_eff - tgt, 0)
-                give = _give_asc_prefix(balance_q, room, idle_eff - used_lo,
-                                        -1, 65537)
-                return tgt + give
-        else:
-            def expand(balloc):
-                room = jnp.where(expandable,
-                                 jnp.maximum(bj.max_nodes - balloc, 0), 0)
-                prio = balloc - bj.prio_ref
-                return balloc + _give_asc_prefix(room=room, prio=prio,
-                                                 idle=idle, lo0=prio_lo - 1,
-                                                 hi0=prio_hi)
-
-        balloc = jax.lax.cond(jnp.any(idle > 0), expand, lambda b: b, balloc)
-        return bstate, balloc, bstart
-
-    def step(bj, arrival_limit, carry, _):
+    def step(bj, capacity, tick, arrival_limit, carry, _):
         (bstate, balloc, brem, bstart, bend, beops, bsops,
          k, retrig, frozen) = carry
         t = k.astype(jnp.float32) * tick
@@ -530,8 +357,17 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         running0 = bstate == RUNNING
         alloc0 = balloc
         state0 = bstate
-        bstate, balloc, bstart = schedule_pass(
-            bj, bstate, balloc, bstart, t_next, act)
+        # shared Steps 1-3 scheduling pass (policy core)
+        params = PassParams(
+            malleable=bj.malleable, min_nodes=bj.min_nodes,
+            max_nodes=bj.max_nodes, want=bj.want, floor=bj.floor,
+            shrink_floor=bj.shrink_floor, prio_ref=bj.prio_ref,
+            pfrac=bj.pfrac, wall_work=bj.wall_work)
+        bstate, balloc, bstart = schedule_tick(
+            params, bstate, balloc, brem, bstart, act[:, None],
+            capacity, t_next, balanced=cfg.balanced,
+            fill_rounds=cfg.fill_rounds, prio_lo=prio_lo, prio_hi=prio_hi,
+            span_max=span_max, expand_backend=cfg.expand_backend)
 
         # net per-invocation op accounting (jobs running before & after)
         still = running0 & (bstate == RUNNING)
@@ -555,10 +391,12 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         active = (state == QUEUED) | (state == RUNNING)
         n_active = jnp.sum(active, axis=-1)
         pending = state == PENDING
-        aptr = n - jnp.sum(pending, axis=-1)  # pending is a suffix (FCFS)
+        ar = jnp.arange(n)[None, :]
+        # first still-pending slot (padding is DONE, so this stays within
+        # the lane's real jobs; n when everything arrived)
+        aptr = jnp.min(jnp.where(pending, ar, n), axis=-1)
 
         # -- compact active + arrival reserve into W slots (FCFS order) ---
-        ar = jnp.arange(n)[None, :]
         reserve = jnp.maximum(W - n_active, 0)
         sel = active | (pending & (ar < (aptr + reserve)[:, None]))
         pos = jnp.cumsum(sel, axis=-1) - 1
@@ -572,22 +410,28 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             return jnp.where(slot_ok, jnp.take_along_axis(a, gidx, -1), fill)
 
         bj = BatchedLanes(
-            submit=jnp.where(slot_ok, batch.submit[gidx], INF),
-            runtime=jnp.where(slot_ok, batch.runtime[gidx], 1.0),
+            submit=g2(batch.submit, INF),
             malleable=g2(batch.malleable, False),
             min_nodes=g2(batch.min_nodes, 1),
             max_nodes=g2(batch.max_nodes, 1),
             pfrac=g2(batch.pfrac, jnp.float32(0.0)),
             inv_ref=g2(batch.inv_ref, jnp.float32(1.0)),
+            wall_work=g2(batch.wall_work, jnp.float32(1.0)),
             want=g2(batch.want, 1),
             floor=g2(batch.floor, 1),
             shrink_floor=g2(batch.shrink_floor, 1),
             prio_ref=g2(batch.prio_ref, 0),
+            capacity=batch.capacity,
+            tick=batch.tick,
         )
         n_prefetch = jnp.sum(sel & pending, axis=-1)
         lim_idx = aptr + n_prefetch
         arrival_limit = jnp.where(
-            lim_idx < n, batch.submit[jnp.minimum(lim_idx, n - 1)], INF)
+            lim_idx < n,
+            jnp.take_along_axis(
+                batch.submit, jnp.minimum(lim_idx, n - 1)[:, None],
+                axis=-1)[:, 0],
+            INF)
 
         carry = (
             g2(state, jnp.int32(DONE)), g2(full["alloc"], 0),
@@ -598,7 +442,9 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             k, retrig, jnp.zeros((B,), bool),
         )
         carry, ys = jax.lax.scan(
-            lambda c, x: step(bj, arrival_limit, c, x), carry, None, length=K)
+            lambda c, x: step(bj, batch.capacity, batch.tick,
+                              arrival_limit, c, x),
+            carry, None, length=K)
         (bstate, balloc, brem, bstart, bend, beops, bsops,
          k, retrig, _frozen) = carry
 

@@ -9,10 +9,14 @@ Matches the numpy reference key-for-key so :func:`aggregate_seeds` works on
 the per-lane dicts unchanged.  Utilization integrates the event-step busy
 timeline (``busy[k]`` holds on ``[t[k], t[k+1])``), which is exact for the
 event-stepped engine's piecewise-constant busy level.
+
+Windows and capacities are **per-lane data** so one call covers a
+multi-workload batch (:func:`repro.sweep.batch.concat_lanes`): each lane
+carries its own measurement window ``[t0, t1]`` and cluster size, and
+padding jobs (``submit = +inf``) fall outside every window.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List
 
 import jax
@@ -20,19 +24,19 @@ import jax.numpy as jnp
 import numpy as np
 
 
-@functools.partial(jax.jit, static_argnames=("capacity",))
+@jax.jit
 def _batched_metrics_device(start, end, expand_ops, shrink_ops, submit,
                             malleable, trace_t, trace_busy, t0, t1, capacity):
     B = start.shape[0]
     done = jnp.isfinite(end)
-    in_win = (submit >= t0) & (submit <= t1)
-    sel = in_win[None, :] & done
+    in_win = (submit >= t0[:, None]) & (submit <= t1[:, None])
+    sel = in_win & done
     n_sel = jnp.sum(sel, axis=-1)
     some = jnp.maximum(n_sel, 1)
 
-    wait = start - submit[None, :]
+    wait = start - submit
     makespan = end - start
-    turnaround = end - submit[None, :]
+    turnaround = end - submit
 
     def mean(x):
         m = jnp.sum(jnp.where(sel, x, 0.0), axis=-1) / some
@@ -50,10 +54,11 @@ def _batched_metrics_device(start, end, expand_ops, shrink_ops, submit,
     # busy integral over the window from the event timeline
     t_next = jnp.concatenate(
         [trace_t[:, 1:], jnp.full((B, 1), jnp.inf, trace_t.dtype)], axis=-1)
-    seg = jnp.clip(jnp.minimum(t_next, t1) - jnp.maximum(trace_t, t0),
-                   0.0, None)
+    seg = jnp.clip(jnp.minimum(t_next, t1[:, None])
+                   - jnp.maximum(trace_t, t0[:, None]), 0.0, None)
     integral = jnp.sum(trace_busy.astype(jnp.float32) * seg, axis=-1)
-    util = integral / (capacity * jnp.maximum(t1 - t0, 1e-9))
+    util = integral / (capacity.astype(jnp.float32)
+                       * jnp.maximum(t1 - t0, 1e-9))
 
     msel = sel & malleable
     n_mall = jnp.sum(msel, axis=-1)
@@ -72,26 +77,39 @@ def _batched_metrics_device(start, end, expand_ops, shrink_ops, submit,
         "utilization": util,
         "expand_per_job": expand.astype(jnp.float32),
         "shrink_per_job": shrink.astype(jnp.float32),
-        "unfinished": jnp.sum(in_win[None, :] & ~done, axis=-1
-                              ).astype(jnp.float32),
+        "unfinished": jnp.sum(in_win & ~done, axis=-1).astype(jnp.float32),
     }
 
 
 def batched_metrics(result: Dict[str, np.ndarray], submit, malleable,
-                    window, capacity: int) -> List[Dict[str, float]]:
+                    window, capacity) -> List[Dict[str, float]]:
     """Per-lane metric dicts for a :func:`simulate_lanes` result.
 
-    ``submit`` (n,) and ``malleable`` (B, n) must be in the same
-    (submit-sorted) job order as the engine result.  Returns one plain-float
-    dict per lane, key-compatible with :func:`repro.core.metrics.run_metrics`.
+    ``submit`` ((n,) or (B, n)) and ``malleable`` (B, n) must be in the same
+    (submit-sorted) job order as the engine result.  ``window`` is either a
+    :class:`repro.core.metrics.Window` shared by every lane or a
+    ``(t0, t1)`` pair of per-lane arrays; ``capacity`` is a shared int or a
+    per-lane array.  Returns one plain-float dict per lane, key-compatible
+    with :func:`repro.core.metrics.run_metrics`.
     """
+    malleable = jnp.asarray(malleable)
+    B = malleable.shape[0]
+    submit = jnp.asarray(submit, jnp.float32)
+    if submit.ndim == 1:
+        submit = jnp.broadcast_to(submit, (B, submit.shape[0]))
+    if hasattr(window, "t0"):
+        t0, t1 = window.t0, window.t1
+    else:
+        t0, t1 = window
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.float32), (B,))
+    t1 = jnp.broadcast_to(jnp.asarray(t1, jnp.float32), (B,))
+    capacity = jnp.broadcast_to(jnp.asarray(capacity, jnp.float32), (B,))
     dev = _batched_metrics_device(
         jnp.asarray(result["start_t"]), jnp.asarray(result["end_t"]),
         jnp.asarray(result["expand_ops"]), jnp.asarray(result["shrink_ops"]),
-        jnp.asarray(submit, jnp.float32), jnp.asarray(malleable),
+        submit, malleable,
         jnp.asarray(result["trace_t"]), jnp.asarray(result["trace_busy"]),
-        jnp.float32(window.t0), jnp.float32(window.t1), int(capacity))
+        t0, t1, capacity)
     host = {k: np.asarray(v) for k, v in dev.items()}
-    B = host["n_jobs"].shape[0]
     keys = list(host)
     return [{k: float(host[k][b]) for k in keys} for b in range(B)]

@@ -28,8 +28,8 @@ def _engine_run(name, strategy, prop, scale):
     cl = CLUSTERS[name]
     w = traces.generate(name, seed=0, scale=scale)
     lanes = [(get_strategy(strategy), prop, 0)]
-    batch, order = build_lanes(w, cl.nodes, lanes)
-    cfg = EngineConfig(capacity=cl.nodes, tick=cl.tick, window=128, chunk=96)
+    batch, order = build_lanes(w, cl.nodes, lanes, tick=cl.tick)
+    cfg = EngineConfig(window=128, chunk=96)
     res = simulate_lanes(batch, cfg)
     return cl, w, Window.for_workload(w), batch, order, res
 

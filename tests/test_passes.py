@@ -1,0 +1,222 @@
+"""The extracted scheduling-policy core (repro.core.passes).
+
+Three layers of coverage, matching the module's three implementation
+families:
+
+  * numpy-vs-jnp parity of the exact argsort-based Steps 2-3 passes;
+  * shadow-time EASY reservation units (sort-free bisection vs. the exact
+    oracle; the reserved head is never delayed by backfill; backfill that
+    fits under the shadow still happens);
+  * a small-grid three-way engine parity check (numpy DES vs. dense-tick
+    ``sim_jax`` vs. the event-stepped batched engine), plus bit-parity of
+    the multi-cluster padded batch against per-workload runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (STRATEGIES, Cluster, Workload, simulate,
+                        transform_rigid_to_malleable)
+from repro.core import passes
+from repro.core.sim_jax import simulate_jax
+from repro.sweep.batch import (EngineConfig, build_lanes, concat_lanes,
+                               simulate_lanes)
+
+jnp = pytest.importorskip("jax.numpy")
+
+TINY = Cluster("t", nodes=10, tick=1.0)
+
+
+def _wl(seed=0, n=20, hi=150.0, prop=0.0, nodes=10):
+    rng = np.random.default_rng(seed)
+    w = Workload.rigid(submit=np.sort(rng.uniform(0, hi, n)),
+                       runtime=rng.uniform(20, 120, n),
+                       nodes_req=rng.choice([1, 2, 4, 8], n))
+    if prop > 0:
+        w = transform_rigid_to_malleable(w, prop, seed=seed,
+                                         cluster_nodes=nodes)
+    return w
+
+
+# ------------------------------------------------------- numpy/jnp parity
+def _random_case(rng, n=12, span=16):
+    mn = rng.integers(1, 4, n)
+    mx = mn + rng.integers(0, span, n)
+    alloc = rng.integers(0, span + 4, n).clip(mn, mx)
+    prio = rng.integers(-5, 6, n)
+    return alloc, mn, mx, prio
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_greedy_passes_numpy_jnp_parity(trial):
+    rng = np.random.default_rng(trial)
+    alloc, mn, mx, prio = _random_case(rng)
+    need = int(rng.integers(0, np.sum(alloc - mn) + 3))
+    idle = int(rng.integers(0, np.sum(mx - alloc) + 3))
+    shr_np = passes.greedy_shrink(alloc, mn, prio, need, xp=np)
+    shr_j = passes.greedy_shrink(jnp.asarray(alloc), jnp.asarray(mn),
+                                 jnp.asarray(prio), need, xp=jnp)
+    np.testing.assert_array_equal(shr_np, np.asarray(shr_j))
+    exp_np = passes.greedy_expand(alloc, mx, prio, idle, xp=np)
+    exp_j = passes.greedy_expand(jnp.asarray(alloc), jnp.asarray(mx),
+                                 jnp.asarray(prio), idle, xp=jnp)
+    np.testing.assert_array_equal(exp_np, np.asarray(exp_j))
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_balanced_passes_numpy_jnp_parity(trial):
+    rng = np.random.default_rng(100 + trial)
+    alloc, mn, mx, _ = _random_case(rng)
+    need = int(rng.integers(0, np.sum(alloc - mn) + 3))
+    idle = int(rng.integers(0, np.sum(mx - alloc) + 3))
+    shr_np = passes.balanced_shrink(alloc, mn, mx, need, xp=np)
+    shr_j = passes.balanced_shrink(jnp.asarray(alloc), jnp.asarray(mn),
+                                   jnp.asarray(mx), need, xp=jnp)
+    np.testing.assert_array_equal(np.asarray(shr_np), np.asarray(shr_j))
+    exp_np = passes.balanced_expand(alloc, mn, mx, idle, xp=np)
+    exp_j = passes.balanced_expand(jnp.asarray(alloc), jnp.asarray(mn),
+                                   jnp.asarray(mx), idle, xp=jnp)
+    np.testing.assert_array_equal(np.asarray(exp_np), np.asarray(exp_j))
+
+
+# ------------------------------------------- shadow-time reservation units
+@pytest.mark.parametrize("trial", range(6))
+def test_shadow_reservation_matches_exact_oracle(trial):
+    """The sort-free time bisection lands on the exact oracle's shadow."""
+    rng = np.random.default_rng(trial)
+    k = int(rng.integers(2, 9))
+    # distinct end estimates: the snapped bisection bound is unambiguous
+    ests = np.sort(rng.uniform(10.0, 500.0, k)).astype(np.float32)
+    release = rng.integers(1, 5, k)
+    head_floor = int(release.sum()) + int(rng.integers(-3, 1))
+    head_floor = max(head_floor, int(release[0]) + 1)
+    free = 0  # blocked head
+    shadow_ref, extra_ref = passes.easy_reservation_exact(
+        ests, release, free, head_floor)
+
+    W = 16  # pad to fixed shape with non-running (+inf) slots
+    est = np.full(W, np.inf, np.float32)
+    rel = np.zeros(W, np.int32)
+    est[:k], rel[:k] = ests, release
+    shadow, extra = passes.shadow_reservation(
+        jnp.asarray(est), jnp.asarray(rel), jnp.int32(free),
+        jnp.int32(head_floor))
+    np.testing.assert_allclose(float(shadow), shadow_ref, rtol=1e-5)
+    assert int(extra) == extra_ref
+
+
+def _head_blocking_workload():
+    """A running 8-node job, a 10-node head, and two backfill candidates.
+
+    * job 0 (runtime 50): running, releases the cluster at t=50;
+    * job 1 (10 nodes): the blocked head — its reservation is t=62.5
+      (walltime-padded estimate of job 0);
+    * job 2 (2 nodes, runtime 200): would hold nodes far past the
+      reservation — starting it would delay the head;
+    * job 3 (2 nodes, runtime 10): finishes before the reservation —
+      legitimate backfill.
+    """
+    return Workload.rigid(
+        submit=np.array([0.0, 1.0, 2.0, 3.0]),
+        runtime=np.array([50.0, 30.0, 200.0, 10.0]),
+        nodes_req=np.array([8, 10, 2, 2]))
+
+
+def _starts(name, w):
+    if name == "des":
+        return simulate(w, TINY, STRATEGIES["easy"]).start
+    if name == "sim_jax":
+        st, _ = simulate_jax(w, TINY.nodes, TINY.tick, 400,
+                             STRATEGIES["easy"])
+        return np.asarray(st.start_t)
+    batch, order = build_lanes(w, TINY.nodes, [(STRATEGIES["easy"], 0.0, 0)])
+    res = simulate_lanes(batch, EngineConfig(window=8, chunk=32))
+    return res["start_t"][0][np.argsort(order)]
+
+
+@pytest.mark.parametrize("engine", ["des", "sim_jax", "batch"])
+def test_backfill_never_delays_reserved_head(engine):
+    """The long candidate must not start before the head (no spare pool),
+    so the head starts as soon as the running job completes."""
+    start = _starts(engine, _head_blocking_workload())
+    # head starts right when job 0 releases its 8 nodes (t=50)
+    assert start[1] == pytest.approx(50.0, abs=2 * TINY.tick)
+    # the reservation-violating candidate waits for the head to finish
+    assert start[2] >= start[1] + 1.0
+
+
+@pytest.mark.parametrize("engine", ["des", "sim_jax", "batch"])
+def test_backfill_under_shadow_still_happens(engine):
+    """The short candidate fits under the shadow: it backfills immediately
+    and the head is still never starved."""
+    start = _starts(engine, _head_blocking_workload())
+    assert start[3] <= 5.0 + 2 * TINY.tick   # backfilled at submit
+    assert start[1] == pytest.approx(50.0, abs=2 * TINY.tick)
+
+
+# ----------------------------------------------- three-way engine parity
+@pytest.mark.parametrize("name,prop", [("easy", 0.0), ("min", 0.5),
+                                       ("avg", 0.5)])
+def test_three_way_engine_parity_small_grid(name, prop):
+    """DES, sim_jax and the batched engine agree on starts/ends within the
+    documented tick-quantization tolerance on a low-contention workload."""
+    rng = np.random.default_rng(5)
+    n = 12
+    w = Workload.rigid(submit=np.sort(rng.uniform(0, 200, n)),
+                       runtime=rng.uniform(20, 80, n),
+                       nodes_req=rng.choice([1, 2], n))
+    wm = (w if prop == 0.0 else
+          transform_rigid_to_malleable(w, prop, seed=1, cluster_nodes=10))
+    strat = STRATEGIES[name]
+
+    ref = simulate(wm, TINY, strat)
+    st, _ = simulate_jax(wm, TINY.nodes, TINY.tick, 600, strat)
+    batch, order = build_lanes(w, TINY.nodes,
+                               [(strat, prop, 1)])
+    res = simulate_lanes(batch, EngineConfig(balanced=strat.balanced,
+                                             window=16, chunk=64))
+    inv = np.argsort(order)
+
+    np.testing.assert_allclose(np.asarray(st.start_t), ref.start, atol=2.0)
+    np.testing.assert_allclose(np.asarray(st.end_t), ref.end, atol=4.0)
+    np.testing.assert_allclose(res["start_t"][0][inv], ref.start, atol=2.0)
+    np.testing.assert_allclose(res["end_t"][0][inv], ref.end, atol=4.0)
+
+
+# -------------------------------------------------- pallas expand backend
+@pytest.mark.parametrize("trial", range(4))
+def test_pallas_give_matches_bisection_give(trial):
+    """The Pallas prefix-waterfill expand backend (interpret mode) agrees
+    with the sort-free threshold bisection slot-for-slot."""
+    rng = np.random.default_rng(200 + trial)
+    B, W = 3, 10
+    prio = jnp.asarray(rng.integers(-4, 5, (B, W)), jnp.int32)
+    room = jnp.asarray(rng.integers(0, 6, (B, W)), jnp.int32)
+    idle = jnp.asarray(rng.integers(0, 25, B), jnp.int32)
+    ref = passes.give_asc_prefix(prio, room, idle, -5, 5)
+    got = passes._pallas_give(prio, room, idle, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# ------------------------------------------- multi-cluster padded batching
+def test_concat_lanes_matches_per_workload_runs():
+    """Lanes of different workloads/clusters stacked into one padded batch
+    reproduce each workload's solo batch result exactly."""
+    cfg = EngineConfig(window=16, chunk=64)
+    w_a = _wl(seed=0, n=20)
+    w_b = _wl(seed=9, n=13, hi=100.0)
+    lanes_a = [(STRATEGIES["easy"], 0.0, 0), (STRATEGIES["min"], 0.6, 0)]
+    lanes_b = [(STRATEGIES["pref"], 1.0, 1)]
+    b_a, _ = build_lanes(w_a, 10, lanes_a, tick=1.0)
+    b_b, _ = build_lanes(w_b, 6, lanes_b, tick=2.0)
+
+    big = concat_lanes([b_a, b_b])
+    assert big.n_lanes == 3 and big.n_jobs == 20
+    res = simulate_lanes(big, cfg)
+    res_a = simulate_lanes(b_a, cfg)
+    res_b = simulate_lanes(b_b, cfg)
+
+    for key in ("start_t", "end_t", "expand_ops", "shrink_ops"):
+        np.testing.assert_array_equal(res[key][:2], res_a[key])
+        np.testing.assert_array_equal(res[key][2:, :13], res_b[key])
+    # padding slots never ran
+    assert np.all(np.isnan(res["start_t"][2:, 13:]))

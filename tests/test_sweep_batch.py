@@ -20,7 +20,7 @@ def _wl(seed=0, n=20, hi=150.0):
 
 LANES = [(STRATEGIES["easy"], 0.0, 0), (STRATEGIES["min"], 0.6, 0),
          (STRATEGIES["pref"], 1.0, 1), (STRATEGIES["keeppref"], 0.6, 0)]
-CFG = EngineConfig(capacity=10, tick=1.0, window=16, chunk=64)
+CFG = EngineConfig(window=16, chunk=64)
 
 
 @pytest.fixture(scope="module")
@@ -93,8 +93,7 @@ def test_balanced_engine_runs_avg_lanes():
     w = _wl(seed=3)
     lanes = [(STRATEGIES["avg"], 0.8, 0), (STRATEGIES["avg"], 1.0, 1)]
     batch, order = build_lanes(w, 10, lanes)
-    cfg = EngineConfig(capacity=10, tick=1.0, balanced=True, window=16,
-                       chunk=64)
+    cfg = EngineConfig(balanced=True, window=16, chunk=64)
     res = simulate_lanes(batch, cfg)
     assert res["finished"]
     assert int(res["trace_busy"].max()) <= TINY.nodes
@@ -111,8 +110,7 @@ def test_window_escalation_recovers_from_small_window():
     rather than stall or corrupt state."""
     w = _wl(n=30, hi=60.0)  # heavy burst -> deep queue
     batch, order = build_lanes(w, 10, [(STRATEGIES["easy"], 0.0, 0)])
-    cfg = EngineConfig(capacity=10, tick=1.0, window=4, chunk=32,
-                       reserve_slack=2)
+    cfg = EngineConfig(window=4, chunk=32, reserve_slack=2)
     res = simulate_lanes(batch, cfg)
     assert res["finished"]
     assert res["window"] > 4

@@ -3,15 +3,29 @@
 Fig 1  — raw vs cleaned utilization (corruption artifacts removed)
 Fig 2/4— rigid node-utilization timeline with warm-up/drain markers
 Fig 3/5— job-size and runtime distributions of the trace twins
-Fig 6-9— malleability sweeps (rendered from benchmarks.sweep results)
+Fig 6-9— malleability sweeps (rendered from experiment-layer artifacts)
+
+Trace realization routes through
+:func:`repro.experiments.prepare_workload`, so a figure rendered for a
+scenario (compressed arrivals, rescaled walltimes) shows exactly the
+workload the corresponding sweep simulated.  The Fig. 6-9 table renderer
+lives in :mod:`repro.experiments.report` (re-exported here for
+compatibility) because it consumes the shared artifact schema.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
-
 import numpy as np
 
-from repro.core import CLUSTERS, Window, get_strategy, simulate, traces
+from repro.core import CLUSTERS, get_strategy, simulate, traces
+from repro.core.scenario import ScenarioConfig
+from repro.experiments import ExperimentSpec, prepare_workload
+from repro.experiments.report import render_sweep_table  # noqa: F401 (re-export)
+
+
+def _spec(name: str, scale: float,
+          scenario: ScenarioConfig | None) -> ExperimentSpec:
+    return ExperimentSpec(workloads=(name,), scale=scale,
+                          scenario=scenario or ScenarioConfig())
 
 
 def _bar(frac: float, width: int = 40) -> str:
@@ -19,12 +33,11 @@ def _bar(frac: float, width: int = 40) -> str:
     return "#" * n + "." * (width - n)
 
 
-def fig_rigid_util(name: str, scale: float = 0.2, buckets: int = 24) -> str:
+def fig_rigid_util(name: str, scale: float = 0.2, buckets: int = 24,
+                   scenario: ScenarioConfig | None = None) -> str:
     """Figs. 2/4: busy-node timeline under 100% rigid EASY."""
-    w = traces.generate(name, seed=0, scale=scale)
-    cl = CLUSTERS[name]
+    cl, w, win = prepare_workload(_spec(name, scale, scenario), name)
     res = simulate(w, cl, get_strategy("easy"))
-    win = Window.for_workload(w)
     edges = np.linspace(0, max(res.end_time, win.t1), buckets + 1)
     out = [f"== Fig 2/4 analogue: {name} rigid utilization "
            f"(cap {cl.nodes} nodes) =="]
@@ -41,9 +54,10 @@ def fig_rigid_util(name: str, scale: float = 0.2, buckets: int = 24) -> str:
     return "\n".join(out)
 
 
-def fig_distributions(name: str, scale: float = 0.2) -> str:
+def fig_distributions(name: str, scale: float = 0.2,
+                      scenario: ScenarioConfig | None = None) -> str:
     """Figs. 3/5: node-count and runtime CDFs of the twin."""
-    w = traces.generate(name, seed=0, scale=scale)
+    _, w, _ = prepare_workload(_spec(name, scale, scenario), name)
     out = [f"== Fig 3/5 analogue: {name} job distributions =="]
     out.append("  node-count CDF:")
     for q in (1, 2, 4, 8, 32, 128, 512):
@@ -58,7 +72,7 @@ def fig_distributions(name: str, scale: float = 0.2) -> str:
 
 def fig_cleaning(name: str = "haswell", scale: float = 0.2) -> str:
     """Fig 1 analogue: raw (split+shared) vs cleaned utilization peak."""
-    w = traces.generate(name, seed=0, scale=scale)
+    _, w, _ = prepare_workload(_spec(name, scale, None), name)
     raw = traces.corrupt_trace(w, seed=0, shared_frac=0.24)
     cap = CLUSTERS[name].nodes
     t_raw, u_raw = traces.raw_utilization_timeline(raw)
@@ -70,32 +84,6 @@ def fig_cleaning(name: str = "haswell", scale: float = 0.2) -> str:
     out.append(f"  raw peak 'utilization' {u_raw.max():,.0f} nodes vs "
                f"capacity {cap:,} "
                f"({'exceeds cap (artifact)' if u_raw.max() > cap else 'ok'})")
-    return "\n".join(out)
-
-
-def render_sweep_table(results: Dict, metrics: Sequence[str] = (
-        "turnaround_mean", "wait_mean", "utilization")) -> str:
-    """Figs 6-9 analogue: strategy x proportion metric tables."""
-    meta = results["_meta"]
-    props = [int(p * 100) for p in meta["proportions"]]
-    out = [f"== Fig 6-9 analogue: {meta['workload']} "
-           f"(scale {meta['scale']}, {meta['seeds']} seeds) =="]
-    for metric in metrics:
-        out.append(f"  {metric}:")
-        hdr = "    strategy  " + "".join(f"{p:>12d}%" for p in props)
-        out.append(hdr)
-        rigid_v = results["rigid"].get(metric, float("nan"))
-        for strat in ("min", "pref", "avg", "keeppref"):
-            cells = []
-            for p in props:
-                if p == 0:
-                    v = rigid_v
-                else:
-                    r = results.get(f"{strat}@{p}", {})
-                    v = r.get(f"{metric}_mean", float("nan"))
-                cells.append(f"{v:>13,.1f}" if np.isfinite(v) else
-                             f"{'-':>13}")
-            out.append(f"    {strat:<9}" + "".join(cells))
     return "\n".join(out)
 
 

@@ -13,6 +13,13 @@ import numpy as np
 
 from repro.configs.workloads import WORKLOADS
 from repro.core import traces
+from repro.experiments import ExperimentSpec, prepare_workload
+
+
+def _twin(name: str, seed: int, scale: float):
+    """Trace twin via the experiment layer (same realization as sweeps)."""
+    spec = ExperimentSpec(workloads=(name,), trace_seed=seed, scale=scale)
+    return prepare_workload(spec, name)[1]
 
 
 def table1(scale: float = 0.2, seed: int = 0) -> Dict[str, Dict]:
@@ -21,7 +28,7 @@ def table1(scale: float = 0.2, seed: int = 0) -> Dict[str, Dict]:
     # the paper cleans eagle / knl / haswell; theta needed no cleaning
     for name, shared_frac in (("eagle", 0.02), ("knl", 0.05),
                               ("haswell", 0.24)):
-        w = traces.generate(name, seed=seed, scale=scale)
+        w = _twin(name, seed, scale)
         raw = traces.corrupt_trace(w, seed=seed, shared_frac=shared_frac)
         cleaned, rep = traces.clean_trace(raw)
         rows[name] = {
@@ -50,7 +57,7 @@ PAPER_TABLE3 = {"haswell": 235.49, "knl": 340.36, "eagle": 214.03,
 def table3(scale: float = 1.0, seed: int = 0) -> Dict[str, Dict]:
     rows = {}
     for name, wc in WORKLOADS.items():
-        w = traces.generate(name, seed=seed, scale=scale)
+        w = _twin(name, seed, scale)
         hours = (np.max(w.submit) - np.min(w.submit)) / 3600.0
         rate = w.n_jobs / hours
         config_rate = wc.n_jobs / (wc.duration_days * 24.0)

@@ -3,6 +3,15 @@
 Default (CI-friendly) scale runs reduced traces; ``--full`` reproduces the
 paper-scale sweeps (hours on one CPU core).
 
+Sweeps route through the declarative experiment layer
+(:mod:`repro.experiments`): one :class:`~repro.experiments.ExperimentSpec`
+covers all requested workloads, both engines share the per-cell result
+store under ``artifacts/sweep_cache``, and whole-file sweep artifacts
+(``artifacts/sweep-<name>.json``) are reused **only** when their recorded
+spec fingerprint matches the requested experiment — a cached artifact from
+a different scale, seed count, scenario, engine or engine version is
+recomputed, never silently replayed.
+
   PYTHONPATH=src python -m benchmarks.run [--scale 0.15] [--seeds 3]
 """
 from __future__ import annotations
@@ -12,7 +21,12 @@ import json
 import pathlib
 import time
 
-from . import figures, paper_tables, roofline, sweep
+from repro.experiments import (ExperimentSpec, best_improvements,
+                               load_artifact_results, render_sweep_table,
+                               run_experiment, write_artifact)
+from repro.experiments.cli import add_scenario_arguments, scenario_from_args
+
+from . import figures, paper_tables, roofline
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 
@@ -29,7 +43,10 @@ def main(argv=None) -> int:
                     default=["haswell", "knl", "eagle", "theta"])
     ap.add_argument("--engine", choices=["des", "jax"], default="des",
                     help="sweep engine: looped numpy DES or the batched "
-                         "device-resident JAX engine (repro.sweep)")
+                         "device-resident JAX engine")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="[des] cell-parallel worker processes")
+    add_scenario_arguments(ap)
     ap.add_argument("--skip-sweeps", action="store_true")
     ap.add_argument("--no-reuse", action="store_true",
                     help="recompute sweeps even if artifacts exist")
@@ -39,6 +56,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.full:
         args.scale, args.seeds = 1.0, 10
+
+    scenario = scenario_from_args(args)
 
     t0 = time.monotonic()
     print("#" * 72)
@@ -54,8 +73,10 @@ def main(argv=None) -> int:
     for name in args.workloads:
         # eagle's 143k-job trace: keep the figure sim at the sweep's scale
         fscale = 0.06 if name == "eagle" else min(args.scale, 0.3)
-        print(figures.fig_rigid_util(name, scale=fscale), flush=True)
-        print(figures.fig_distributions(name, scale=fscale), flush=True)
+        print(figures.fig_rigid_util(name, scale=fscale, scenario=scenario),
+              flush=True)
+        print(figures.fig_distributions(name, scale=fscale,
+                                        scenario=scenario), flush=True)
     print()
 
     if not args.skip_sweeps:
@@ -64,86 +85,71 @@ def main(argv=None) -> int:
               f"seeds={args.seeds})")
         print("#" * 72)
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        spec = ExperimentSpec(
+            workloads=tuple(args.workloads), scale=args.scale,
+            seeds=args.seeds, engine=args.engine, scenario=scenario)
         all_results: dict = {}
         to_run = []
         for name in args.workloads:
-            cache = ARTIFACTS / f"sweep-{name}.json"
-            cached_results = None
-            if cache.exists() and not args.no_reuse:
-                cached_results = json.loads(cache.read_text())["results"]
-                cached_engine = cached_results.get("_meta", {}).get(
-                    "engine", "des")
-                if cached_engine != args.engine:
-                    print(f"[sweep:{name}] cached artifact is from the "
-                          f"{cached_engine} engine; recomputing with "
-                          f"{args.engine}")
-                    cached_results = None
-            if cached_results is not None:
-                all_results[name] = cached_results
-                print(f"[sweep:{name}] reusing {cache}")
+            artifact = ARTIFACTS / f"sweep-{name}.json"
+            cached = (None if args.no_reuse else
+                      load_artifact_results(artifact, spec, name))
+            if cached is not None:
+                all_results[name] = cached
+                print(f"[sweep:{name}] reusing {artifact} "
+                      f"(spec {cached['_meta']['spec_key'][:12]})")
             elif args.only_cached:
-                print(f"[sweep:{name}] no cached sweep artifact; skipping "
-                      f"(run `python -m benchmarks.sweep --workload {name}`)")
+                print(f"[sweep:{name}] no artifact for spec "
+                      f"{spec.for_workload(name).key()[:12]}; skipping "
+                      f"(re-run this command without --only-cached to "
+                      f"compute it)")
             else:
                 to_run.append(name)
 
-        sweep_walls: dict = {}
         batch_wall = None
-        if to_run and args.engine == "jax":
-            # all remaining clusters as ONE padded multi-trace batch:
-            # capacity/tick are lane data, so the whole set shares a
-            # single compilation per engine structure
-            from repro.sweep import runner as jax_runner
-            jax_runner.enable_compilation_cache(ARTIFACTS / "xla_cache")
+        if to_run:
+            run_spec = ExperimentSpec(
+                workloads=tuple(to_run), scale=args.scale, seeds=args.seeds,
+                engine=args.engine, scenario=scenario)
             t_sw = time.monotonic()
-            computed = jax_runner.sweep_workloads_jax(
-                to_run, scale=args.scale, seeds=args.seeds,
-                # --no-reuse means recompute: bypass the cell cache too
+            computed = run_experiment(
+                run_spec,
+                # --no-reuse means recompute: bypass the cell store too —
+                # but keep XLA compilations persistent (results-neutral)
                 cache_dir=None if args.no_reuse
-                else str(ARTIFACTS / "sweep_cache"))
-            # one shared batch: per-workload time is not separable
+                else str(ARTIFACTS / "sweep_cache"),
+                xla_cache_dir=str(ARTIFACTS / "xla_cache"),
+                backend_options={"workers": args.workers})
             batch_wall = time.monotonic() - t_sw
             all_results.update(computed)
-        elif to_run:
-            for name in to_run:
-                t_sw = time.monotonic()
-                all_results[name] = sweep.sweep_workload(
-                    name, scale=args.scale, seeds=args.seeds)
-                sweep_walls[name] = time.monotonic() - t_sw
 
         for name in args.workloads:
             if name not in all_results:
                 continue
             results = all_results[name]
             print()
-            print(figures.render_sweep_table(results))
-            summary = sweep.best_improvements(results)
+            print(render_sweep_table(results))
+            summary = best_improvements(results)
             print(f"\n  {name} best-vs-rigid at 100% malleable:")
             for metric, r in summary.items():
                 print(f"    {metric:<12} {r['rigid']:>12,.1f} -> "
                       f"{r['best']:>12,.1f}  ({r['improvement_pct']:+6.1f}% "
                       f"via {r['strategy']})")
-            (ARTIFACTS / f"sweep-{name}.json").write_text(
-                json.dumps({"results": results, "summary": summary},
-                           indent=1, default=float))
+            write_artifact(ARTIFACTS / f"sweep-{name}.json", results,
+                           summary)
             print()
-        if sweep_walls or batch_wall is not None:
+        if batch_wall is not None:
             # wall-clock record per engine: running once with each of
             # --engine des / --engine jax leaves a comparable pair in
-            # artifacts/ (see sweep/README.md "Performance").  The DES
-            # path times each workload; the jax path runs one shared
-            # batch, so only the batch total is real.
+            # artifacts/ (see sweep/README.md "Performance").  Either
+            # engine runs the remaining workloads as one experiment, so
+            # only the batch total is real.
             timing_path = ARTIFACTS / f"sweep-timing-{args.engine}.json"
             timing = {"engine": args.engine, "scale": args.scale,
-                      "seeds": args.seeds}
-            if batch_wall is not None:
-                timing["batch_workloads"] = to_run
-                timing["total_s"] = batch_wall
-                timing["engine_info"] = {
-                    n: all_results[n].get("_engine", {}) for n in to_run}
-            else:
-                timing["workloads"] = sweep_walls
-                timing["total_s"] = sum(sweep_walls.values())
+                      "seeds": args.seeds, "batch_workloads": to_run,
+                      "total_s": batch_wall,
+                      "engine_info": {n: all_results[n].get("_engine", {})
+                                      for n in to_run}}
             timing_path.write_text(json.dumps(timing, indent=1,
                                               default=float))
             print(f"[sweep] wall-clock record -> {timing_path}")

@@ -4,14 +4,17 @@ For one workload: proportions 0..100% x strategies x seeds ->
 per-(strategy, proportion) aggregated metrics with IQR, plus the
 improvement-vs-rigid summary the paper's abstract quotes.
 
-Two engines evaluate the same grid:
+A thin CLI over the declarative experiment layer
+(:mod:`repro.experiments`): the grid, the scenario axes (walltime
+accuracy, arrival compression, backfill depth) and the engine choice all
+live in one :class:`~repro.experiments.ExperimentSpec`, and both engines
+share the per-cell result store (resume/incremental reuse):
 
-  * ``--engine des`` (default): the reference numpy DES, one Python-level
-    simulation per (strategy, proportion, seed) cell;
-  * ``--engine jax``: the batched device-resident engine
-    (:mod:`repro.sweep`), which runs the whole grid as fixed-shape lanes on
-    one device, caches per-cell results on disk, and can ``--crosscheck``
-    sampled cells against the DES.
+  * ``--engine des`` (default): the reference numpy DES, one simulation
+    per cell, optionally ``--workers N`` process-parallel;
+  * ``--engine jax``: the batched device-resident engine, the whole grid
+    as fixed-shape lanes on one device, ``--crosscheck``-able against
+    the DES.
 
 ``--compare-engines`` runs both on the same grid and reports wall-clock.
 
@@ -24,140 +27,76 @@ import argparse
 import json
 import pathlib
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import numpy as np
+from repro.experiments import (ExperimentSpec, best_improvements,
+                               run_experiment, write_artifact)
+from repro.experiments.cli import (add_backend_arguments, add_spec_arguments,
+                                   backend_options_from_args, spec_from_args)
 
-from repro.core import (CLUSTERS, Window, aggregate_seeds, get_strategy,
-                        improvement, run_metrics, simulate, traces)
-from repro.core.speedup import transform_rigid_to_malleable
-from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
-                                   SWEEP_PROPORTIONS)
-
-PROPORTIONS = SWEEP_PROPORTIONS
-MALLEABLE_STRATEGIES = MALLEABLE_STRATEGY_NAMES
+__all__ = ["sweep_workload", "best_improvements", "compare_engines", "main"]
 
 
 def sweep_workload(name: str, *, scale: float = 0.2, seeds: int = 3,
-                   proportions=PROPORTIONS,
-                   strategies=MALLEABLE_STRATEGIES,
+                   proportions=None, strategies=None,
                    backfill_depth: int = 256,
+                   cache_dir: Optional[str] = None,
+                   workers: int = 0,
                    verbose: bool = True) -> Dict:
-    """Returns {"rigid": metrics, (strategy, prop): metrics...} aggregated."""
-    cl = CLUSTERS[name]
-    w_rigid = traces.generate(name, seed=0, scale=scale)
-    window = Window.for_workload(w_rigid)
+    """Reference-DES sweep of one workload (spec-routed back-compat API).
 
-    t0 = time.monotonic()
-    rigid = run_metrics(simulate(w_rigid, cl, get_strategy("easy"),
-                                 backfill_depth=backfill_depth),
-                        w_rigid, cl, window)
-    if verbose:
-        print(f"[sweep:{name}] rigid: turnaround="
-              f"{rigid['turnaround_mean']:,.0f}s wait="
-              f"{rigid['wait_mean']:,.0f}s util={rigid['utilization']:.3f} "
-              f"({time.monotonic()-t0:.0f}s)")
-
-    results: Dict[str, Dict] = {"rigid": rigid}
-    for strat in strategies:
-        for prop in proportions:
-            if prop == 0.0:
-                results[f"{strat}@0"] = rigid
-                continue
-            per_seed: List[Dict] = []
-            for seed in range(seeds):
-                wm = transform_rigid_to_malleable(w_rigid, prop, seed,
-                                                  cl.nodes)
-                res = simulate(wm, cl, get_strategy(strat),
-                               backfill_depth=backfill_depth)
-                per_seed.append(run_metrics(res, wm, cl, window))
-            agg = aggregate_seeds(per_seed)
-            results[f"{strat}@{int(prop*100)}"] = agg
-            if verbose:
-                print(f"[sweep:{name}] {strat}@{int(prop*100)}%: "
-                      f"turnaround={agg['turnaround_mean_mean']:,.0f}"
-                      f"±{agg['turnaround_mean_iqr']:,.0f} "
-                      f"wait={agg['wait_mean_mean']:,.0f} "
-                      f"util={agg['utilization_mean']:.3f} "
-                      f"expand/job={agg['expand_per_job_mean']:.1f} "
-                      f"shrink/job={agg['shrink_per_job_mean']:.1f}")
-    results["_meta"] = {"workload": name, "scale": scale, "seeds": seeds,
-                        "proportions": list(proportions)}
-    return results
+    Returns the shared artifact schema: ``{"rigid": metrics,
+    "<strat>@<pct>": aggregates, "_meta": ..., "_engine": ...}``.
+    """
+    from repro.core.scenario import ScenarioConfig
+    kw = {}
+    if proportions is not None:
+        kw["proportions"] = tuple(proportions)
+    if strategies is not None:
+        kw["strategies"] = tuple(strategies)
+    spec = ExperimentSpec(
+        workloads=(name,), scale=scale, seeds=seeds, engine="des",
+        scenario=ScenarioConfig(backfill_depth=backfill_depth), **kw)
+    return run_experiment(spec, cache_dir=cache_dir,
+                          backend_options={"workers": workers},
+                          verbose=verbose)[name]
 
 
-def best_improvements(results: Dict) -> Dict[str, Dict[str, float]]:
-    """Paper-abstract summary: best strategy at 100% vs rigid, per metric."""
-    rigid = results["rigid"]
-    out = {}
-    for metric, key in (("turnaround", "turnaround_mean"),
-                        ("makespan", "makespan_mean"),
-                        ("wait", "wait_mean")):
-        best, best_strat = None, None
-        for strat in MALLEABLE_STRATEGIES:
-            r = results.get(f"{strat}@100")
-            if not r:
-                continue
-            v = r.get(f"{key}_mean", np.nan)
-            if np.isfinite(v) and (best is None or v < best):
-                best, best_strat = v, strat
-        if best is not None:
-            out[metric] = {"rigid": rigid[key], "best": best,
-                           "strategy": best_strat,
-                           "improvement_pct": improvement(rigid[key], best)}
-    # utilization: higher is better
-    best, best_strat = None, None
-    for strat in MALLEABLE_STRATEGIES:
-        r = results.get(f"{strat}@100")
-        if not r:
-            continue
-        v = r.get("utilization_mean", np.nan)
-        if np.isfinite(v) and (best is None or v > best):
-            best, best_strat = v, strat
-    if best is not None:
-        out["utilization"] = {
-            "rigid": rigid["utilization"], "best": best,
-            "strategy": best_strat,
-            "improvement_pct": 100.0 * (best - rigid["utilization"])
-            / max(rigid["utilization"], 1e-9)}
-    return out
-
-
-def compare_engines(name: str, *, scale: float, seeds: int,
-                    proportions, crosscheck: int = 4,
-                    cache_dir: Optional[str] = None) -> Dict:
+def compare_engines(spec: ExperimentSpec, *, crosscheck: int = 4) -> Dict:
     """Wall-clock comparison: looped DES vs. the batched JAX engine.
 
-    The JAX engine is timed twice — cold (first call in the process, XLA
-    compilation included) and steady-state (compilations reused, per-cell
-    result cache disabled) — because compilation is a one-time cost that
-    the persistent XLA cache carries across processes while the simulation
-    cost recurs with every new grid.
+    Both legs run the *same* single-workload spec (scenario axes, trace
+    seed and strategy set included) with the engine swapped.  The per-cell
+    result store is never consulted, so every leg measures real
+    simulation.  The JAX engine is timed twice — cold (first call in the
+    process, XLA compilation included) and steady-state (compilations
+    reused) — because compilation is a one-time cost that the persistent
+    XLA cache carries across processes while the simulation cost recurs
+    with every new grid.
     """
-    from repro.sweep import runner as jax_runner
+    import dataclasses
+    name, = spec.workloads
+    scale, seeds = spec.scale, spec.seeds
+    des_spec = dataclasses.replace(spec, engine="des")
+    jax_spec = dataclasses.replace(spec, engine="jax")
 
     t0 = time.monotonic()
-    sweep_workload(name, scale=scale, seeds=seeds,
-                   proportions=proportions, verbose=False)
+    run_experiment(des_spec, verbose=False)
     des_wall = time.monotonic() - t0
 
     t0 = time.monotonic()
-    jax_results = jax_runner.sweep_workload_jax(
-        name, scale=scale, seeds=seeds, proportions=proportions,
-        crosscheck=crosscheck, cache_dir=cache_dir, verbose=False)
+    jax_results = run_experiment(jax_spec,
+                                 crosscheck=crosscheck, verbose=False)[name]
     # the crosscheck's DES re-runs are reference work, not engine time
     jax_cold_wall = time.monotonic() - t0 - \
         jax_results.get("_crosscheck", {}).get("seconds", 0.0)
 
     t0 = time.monotonic()
-    jax_runner.sweep_workload_jax(
-        name, scale=scale, seeds=seeds, proportions=proportions,
-        cache_dir=None, verbose=False)
+    run_experiment(jax_spec, verbose=False)
     jax_warm_wall = time.monotonic() - t0
 
     report = {
-        "grid_cells": 1 + len(MALLEABLE_STRATEGIES) *
-        sum(1 for p in proportions if p > 0) * seeds,
+        "grid_cells": len(des_spec.cells()),
         "des_wall_s": des_wall,
         "jax_wall_cold_s": jax_cold_wall,
         "jax_wall_steady_s": jax_warm_wall,
@@ -180,37 +119,25 @@ def compare_engines(name: str, *, scale: float, seeds: int,
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", required=True,
-                    choices=["haswell", "knl", "eagle", "theta"])
-    ap.add_argument("--scale", type=float, default=0.2)
-    ap.add_argument("--seeds", type=int, default=3)
-    ap.add_argument("--proportions", type=float, nargs="*",
-                    default=list(PROPORTIONS))
-    ap.add_argument("--engine", choices=["des", "jax"], default="des",
-                    help="des: looped numpy reference; jax: batched "
-                         "device-resident engine (repro.sweep)")
+    add_spec_arguments(ap, single_workload=True)
+    add_backend_arguments(ap, default_cache_dir="artifacts/sweep_cache")
     ap.add_argument("--crosscheck", type=int, default=0,
                     help="[jax] re-run N sampled cells through the DES; "
                          "cells are drawn from a seeded RNG so reruns "
                          "check the same cells")
     ap.add_argument("--crosscheck-seed", type=int, default=0,
                     help="[jax] RNG seed for crosscheck cell sampling")
-    ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
-                    help="[jax] per-cell result cache ('' disables)")
     ap.add_argument("--compare-engines", action="store_true",
                     help="time the same grid on both engines and report "
-                         "the wall-clock ratio; the per-cell result cache "
+                         "the wall-clock ratio; the per-cell result store "
                          "is disabled so timings are real, and 4 cells are "
                          "crosschecked unless --crosscheck overrides")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
     if args.compare_engines:
-        report = compare_engines(args.workload, scale=args.scale,
-                                 seeds=args.seeds,
-                                 proportions=tuple(args.proportions),
-                                 crosscheck=args.crosscheck or 4,
-                                 cache_dir=None)
+        report = compare_engines(spec_from_args(args),
+                                 crosscheck=args.crosscheck or 4)
         if args.out:
             path = pathlib.Path(args.out)
             path.parent.mkdir(parents=True, exist_ok=True)
@@ -218,32 +145,22 @@ def main(argv=None):
             print(f"[compare:{args.workload}] wrote {path}")
         return
 
-    if args.engine == "jax":
-        from repro.sweep import runner as jax_runner
-        if args.cache_dir:
-            jax_runner.enable_compilation_cache(
-                pathlib.Path(args.cache_dir).parent / "xla_cache")
-        results = jax_runner.sweep_workload_jax(
-            args.workload, scale=args.scale, seeds=args.seeds,
-            proportions=tuple(args.proportions),
-            crosscheck=args.crosscheck,
-            crosscheck_seed=args.crosscheck_seed,
-            cache_dir=args.cache_dir or None)
-    else:
-        results = sweep_workload(args.workload, scale=args.scale,
-                                 seeds=args.seeds,
-                                 proportions=tuple(args.proportions))
+    spec = spec_from_args(args)
+    if args.crosscheck and spec.engine != "jax":
+        ap.error("--crosscheck needs --engine jax "
+                 "(the DES is the reference)")
+    results = run_experiment(
+        spec, cache_dir=args.cache_dir or None,
+        backend_options=backend_options_from_args(args),
+        crosscheck=args.crosscheck,
+        crosscheck_seed=args.crosscheck_seed)[args.workload]
     summary = best_improvements(results)
     print(f"\n[sweep:{args.workload}] best-vs-rigid (100% malleable):")
     for metric, r in summary.items():
         print(f"  {metric}: {r['rigid']:,.1f} -> {r['best']:,.1f} "
               f"({r['improvement_pct']:+.1f}% via {r['strategy']})")
     if args.out:
-        path = pathlib.Path(args.out)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(
-            {"results": results, "summary": summary}, indent=1,
-            default=float))
+        path = write_artifact(args.out, results, summary)
         print(f"[sweep:{args.workload}] wrote {path}")
 
 

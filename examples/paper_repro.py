@@ -4,28 +4,50 @@ Sweeps malleable-job proportion 0..100% for all five strategies on a
 statistical twin of the chosen supercomputer trace and prints the
 Fig. 6-9 analogue tables plus the abstract's best-vs-rigid summary.
 
-Run:  PYTHONPATH=src python examples/paper_repro.py --workload knl \
-          [--scale 0.15 --seeds 3]
+Everything routes through the declarative experiment layer
+(:class:`repro.experiments.ExperimentSpec`), so the same quickstart
+exercises either engine — the reference numpy DES or the batched
+device-resident JAX engine — and the scenario axes:
+
+  PYTHONPATH=src python examples/paper_repro.py --workload knl
+  PYTHONPATH=src python examples/paper_repro.py --workload haswell \
+      --engine jax --scale 0.05
+  PYTHONPATH=src python examples/paper_repro.py --workload knl \
+      --walltime-factor 0.0 --arrival-compression 2.0
 """
 import argparse
-import sys
 
-sys.path.insert(0, ".")  # allow `benchmarks` import when run from repo root
-
-from benchmarks.figures import render_sweep_table
-from benchmarks.sweep import best_improvements, sweep_workload
+from repro.core import ScenarioConfig
+from repro.experiments import (ExperimentSpec, best_improvements,
+                               render_sweep_table, run_experiment)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--workload", default="knl",
                 choices=["haswell", "knl", "eagle", "theta"])
 ap.add_argument("--scale", type=float, default=0.15)
 ap.add_argument("--seeds", type=int, default=2)
+ap.add_argument("--engine", choices=["des", "jax"], default="des",
+                help="des: reference numpy DES; jax: batched "
+                     "device-resident engine")
+ap.add_argument("--workers", type=int, default=0,
+                help="[des] cell-parallel worker processes")
+ap.add_argument("--walltime-factor", type=float, default=1.0)
+ap.add_argument("--walltime-jitter", type=float, default=0.0)
+ap.add_argument("--arrival-compression", type=float, default=1.0)
 args = ap.parse_args()
 
-results = sweep_workload(args.workload, scale=args.scale, seeds=args.seeds)
+spec = ExperimentSpec(
+    workloads=(args.workload,), scale=args.scale, seeds=args.seeds,
+    engine=args.engine,
+    scenario=ScenarioConfig(walltime_factor=args.walltime_factor,
+                            walltime_jitter=args.walltime_jitter,
+                            arrival_compression=args.arrival_compression))
+results = run_experiment(spec, backend_options={"workers": args.workers})
+results = results[args.workload]
 print()
 print(render_sweep_table(results))
-print(f"\nbest-vs-rigid at 100% malleable ({args.workload}):")
+print(f"\nbest-vs-rigid at 100% malleable ({args.workload}, "
+      f"{args.engine} engine):")
 for metric, r in best_improvements(results).items():
     print(f"  {metric:<12} {r['rigid']:>12,.1f} -> {r['best']:>12,.1f}  "
           f"({r['improvement_pct']:+6.1f}% via {r['strategy']})")

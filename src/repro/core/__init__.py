@@ -9,8 +9,9 @@
 from .cluster import CLUSTERS, Cluster, EAGLE, HASWELL, KNL, THETA
 from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
 from .metrics import Window, aggregate_seeds, improvement, iqr, run_metrics
-from .redistribute import (balanced_expand, balanced_shrink, greedy_expand,
-                           greedy_shrink)
+from .passes import (balanced_expand, balanced_shrink, greedy_expand,
+                     greedy_shrink)
+from .scenario import ScenarioConfig, apply_scenario
 from .simulator import SimResult, Simulator, simulate
 from .speedup import (TabulatedSpeedup, TransformConfig, amdahl_efficiency,
                       amdahl_speedup, nodes_at_efficiency,
@@ -25,6 +26,7 @@ __all__ = [
     "DONE", "PENDING", "QUEUED", "RUNNING", "Workload",
     "Window", "aggregate_seeds", "improvement", "iqr", "run_metrics",
     "balanced_expand", "balanced_shrink", "greedy_expand", "greedy_shrink",
+    "ScenarioConfig", "apply_scenario",
     "SimResult", "Simulator", "simulate",
     "TabulatedSpeedup", "TransformConfig", "amdahl_efficiency",
     "amdahl_speedup", "nodes_at_efficiency",

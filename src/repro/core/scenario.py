@@ -1,0 +1,98 @@
+"""Scenario axes: what-if transformations of a rigid trace (beyond §2.3).
+
+The paper evaluates the malleability grid on the traces *as recorded*.
+The related work asks two follow-up questions the experiment layer makes
+sweepable:
+
+  * **Walltime accuracy** (Chadha et al., dynamic resource-aware batch
+    scheduling): EASY's shadow-time reservation plans with the *requested*
+    walltime, so per-job estimate quality changes backfill behavior.
+    ``walltime_factor`` rescales each job's walltime *slack*:
+
+        walltime' = runtime * (1 + f * (walltime / runtime - 1))
+
+    ``f = 1`` keeps the trace (the paper's 125% rule => 25% padding),
+    ``f = 0`` makes every estimate exact, ``f = 4`` inflates the paper's
+    padding to 100%.  Note that on the synthetic twins the 125% rule is
+    *uniform*, and a global rescaling of homogeneous slack provably
+    cancels out of every EASY shadow/fit comparison (all estimated
+    durations scale by the same factor, and so does the shadow horizon) —
+    the schedule is bit-identical (tested in ``tests/test_experiments.
+    py``).  What changes schedules is estimate *heterogeneity*:
+    ``walltime_jitter = s`` multiplies each job's slack by a
+    deterministic per-job lognormal factor ``exp(s*g_j - s^2/2)``
+    (unit mean), so some estimates become tight and others padded —
+    the Chadha-style per-user accuracy spread.
+
+  * **Arrival compression / burstiness** (Fan & Lan, hybrid workload
+    scheduling): ``arrival_compression = c`` divides all submission times
+    by ``c``, raising the offered arrival rate c-fold without touching job
+    shapes — queue-pressure sensitivity at fixed work mix.
+
+  * **Backfill depth**: how many queued candidates behind the blocked head
+    the EASY scan may consider.  Honoured by the DES; the batched engine
+    scans its whole active window (a documented fidelity difference, see
+    ``sweep/README.md``).
+
+Both workload transformations are pure and engine-agnostic: backends apply
+:func:`apply_scenario` to the generated rigid trace *before* the
+rigid->malleable transform, so DES and JAX lanes see bit-identical inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .jobs import Workload
+
+DEFAULT_BACKFILL_DEPTH = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Declarative what-if axes applied on top of a generated trace."""
+
+    walltime_factor: float = 1.0       # scales walltime slack (0 = exact)
+    walltime_jitter: float = 0.0       # per-job lognormal slack spread
+    arrival_compression: float = 1.0   # divides submit times (>1 = burstier)
+    backfill_depth: int = DEFAULT_BACKFILL_DEPTH
+
+    def __post_init__(self) -> None:
+        if self.walltime_factor < 0.0:
+            raise ValueError("walltime_factor must be >= 0")
+        if self.walltime_jitter < 0.0:
+            raise ValueError("walltime_jitter must be >= 0")
+        if self.arrival_compression <= 0.0:
+            raise ValueError("arrival_compression must be > 0")
+        if self.backfill_depth < 1:
+            raise ValueError("backfill_depth must be >= 1")
+
+
+def apply_scenario(workload: Workload,
+                   scenario: ScenarioConfig) -> Workload:
+    """Return ``workload`` with the scenario axes applied (copy on change).
+
+    Order-preserving: submission times are divided by a positive constant
+    and walltimes stay >= runtime, so the result is a valid workload with
+    the same FCFS order.
+    """
+    if (scenario.walltime_factor == 1.0
+            and scenario.walltime_jitter == 0.0
+            and scenario.arrival_compression == 1.0):
+        return workload
+    w = workload.copy()
+    if scenario.arrival_compression != 1.0:
+        w.submit = w.submit / scenario.arrival_compression
+    if (scenario.walltime_factor != 1.0
+            or scenario.walltime_jitter != 0.0):
+        slack = np.maximum(w.walltime / w.runtime - 1.0, 0.0)
+        slack = slack * scenario.walltime_factor
+        if scenario.walltime_jitter != 0.0:
+            s = scenario.walltime_jitter
+            # fixed generator seed: the jitter is part of the scenario's
+            # identity, bit-identical for both backends and every run
+            g = np.random.default_rng(0xE57).standard_normal(w.n_jobs)
+            slack = slack * np.exp(s * g - 0.5 * s * s)  # unit-mean
+        w.walltime = w.runtime * (1.0 + slack)
+    return w

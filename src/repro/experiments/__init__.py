@@ -1,0 +1,21 @@
+# Declarative experiment layer: spec -> backend -> cell store -> artifact.
+#
+# - spec:        ExperimentSpec (grid + scenario axes) with canonical
+#                content-hash fingerprints; prepare_workload realization
+# - run:         run_experiment orchestration over pluggable backends and
+#                the shared cell store; artifact read/write helpers
+# - backend_des: cell-parallel numpy DES backend (jax-free)
+# - backend_jax: adapter over the batched device-resident sweep engine
+# - crosscheck:  seeded DES crosscheck + tolerances (CI fidelity gate)
+# - report:      renderers over the shared artifact schema
+# - cli:         shared argparse wiring for every grid CLI
+from .report import best_improvements, render_sweep_table
+from .run import (load_artifact_results, run_experiment, write_artifact)
+from .spec import ENGINES, ExperimentSpec, prepare_workload
+from repro.core.scenario import ScenarioConfig
+
+__all__ = [
+    "ENGINES", "ExperimentSpec", "ScenarioConfig", "prepare_workload",
+    "run_experiment", "write_artifact", "load_artifact_results",
+    "best_improvements", "render_sweep_table",
+]

@@ -1,0 +1,99 @@
+"""The canonical experiment CLI: one declarative spec, either engine.
+
+Examples::
+
+  PYTHONPATH=src python -m repro.experiments --workload haswell \
+      --scale 0.05 --seeds 2 --engine des --workers 2 \
+      --out artifacts/exp-haswell-des.json
+  PYTHONPATH=src python -m repro.experiments --workload haswell knl \
+      --scale 0.02 --seeds 2 --engine jax --crosscheck 3
+  PYTHONPATH=src python -m repro.experiments --workload knl --engine des \
+      --walltime-factor 0.0 --arrival-compression 2.0
+
+``--expect-cached`` exits non-zero unless *every* cell came from the
+shared store — the CI assertion that a re-run of the same spec is a 100%
+cache hit (the resume path works).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+from .cli import (add_backend_arguments, add_spec_arguments,
+                  backend_options_from_args, spec_from_args)
+from .report import best_improvements
+from .run import run_experiment, write_artifact
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description=__doc__.splitlines()[0])
+    add_spec_arguments(ap)
+    add_backend_arguments(ap)
+    ap.add_argument("--crosscheck", type=int, default=0,
+                    help="[jax] re-run N seeded-sampled cells through the "
+                         "numpy DES (per workload)")
+    ap.add_argument("--crosscheck-seed", type=int, default=0)
+    ap.add_argument("--require-crosscheck", action="store_true",
+                    help="exit non-zero when any crosschecked cell exceeds "
+                         "CROSSCHECK_TOLERANCES (CI regression gate)")
+    ap.add_argument("--expect-cached", action="store_true",
+                    help="exit non-zero unless every cell was a store hit")
+    ap.add_argument("--out", default="",
+                    help="artifact path; with several workloads one file "
+                         "holding {results: {workload: ...}} is written "
+                         "(the historical python -m repro.sweep layout)")
+    args = ap.parse_args(argv)
+    if args.require_crosscheck and not args.crosscheck:
+        ap.error("--require-crosscheck needs --crosscheck N")
+    if args.crosscheck and args.engine != "jax":
+        ap.error("--crosscheck needs --engine jax "
+                 "(the DES is the reference)")
+    if args.expect_cached and not args.cache_dir:
+        ap.error("--expect-cached needs --cache-dir")
+
+    spec = spec_from_args(args)
+    all_results = run_experiment(
+        spec, cache_dir=args.cache_dir or None,
+        backend_options=backend_options_from_args(args),
+        crosscheck=args.crosscheck, crosscheck_seed=args.crosscheck_seed)
+
+    tag = "+".join(spec.workloads)
+    info = next(iter(all_results.values()))["_engine"]
+    print(f"[experiment:{tag}] spec {spec.key()[:12]} engine={spec.engine} "
+          f"wall {info['sim_seconds']:.1f}s cache_hits={info['cache_hits']} "
+          f"computed={info['computed_cells']}")
+    for name, results in all_results.items():
+        print(f"\n[experiment:{name}] best-vs-rigid (100% malleable):")
+        for metric, r in best_improvements(results).items():
+            print(f"  {metric}: {r['rigid']:,.1f} -> {r['best']:,.1f} "
+                  f"({r['improvement_pct']:+.1f}% via {r['strategy']})")
+
+    if args.out:
+        out = pathlib.Path(args.out)
+        if len(all_results) == 1:
+            results = next(iter(all_results.values()))
+            write_artifact(out, results, best_improvements(results))
+        else:  # historical multi-workload layout: one combined file
+            write_artifact(out, all_results)
+        print(f"[experiment:{tag}] wrote {out}")
+
+    rc = 0
+    if args.expect_cached and info["computed_cells"]:
+        print(f"[experiment:{tag}] FAIL: expected a 100% store hit but "
+              f"computed {info['computed_cells']} cells")
+        rc = 1
+    if args.require_crosscheck:
+        bad = [name for name, r in all_results.items()
+               if not r.get("_crosscheck", {}).get("all_within_tolerance",
+                                                   True)]
+        if bad:
+            print(f"[experiment:{tag}] crosscheck EXCEEDED tolerance for: "
+                  f"{', '.join(bad)}")
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

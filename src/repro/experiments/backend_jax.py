@@ -1,0 +1,126 @@
+"""Batched-JAX experiment backend: the whole grid as device lanes.
+
+Adapter between the declarative experiment layer and the batched
+device-resident engine (:mod:`repro.sweep.batch`): cells become fixed-shape
+lanes, greedy-structured strategies (EASY/MIN/PREF/KEEPPREF) share one
+engine batch and one compilation, AVG runs in a second balanced batch, and
+lanes of *different* workloads pad-stack into the same batch
+(:func:`repro.sweep.batch.concat_lanes`) so a single compilation serves all
+four supercomputer grids.  Per-cell metrics come back through
+:mod:`repro.sweep.metrics_jax`; only lanes that ran to completion are
+written to the cell store.
+
+Scenario axes: walltime accuracy and arrival compression are applied to
+the trace before lane construction (bit-identical to the DES backend's
+input).  ``backfill_depth`` is *not* honoured here — the batched engine's
+EASY scan is bounded by its active-set window, a documented fidelity
+difference — so a non-default depth only changes the cell keys, not the
+simulation; a warning is emitted.
+
+Backend options (results-neutral tuning, not part of the spec):
+``window`` (active-set slots, 0 = auto), ``chunk`` (scan steps between
+compactions), ``expand_backend`` (``bisect`` | ``pallas`` |
+``pallas-interpret``).
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import DONE, get_strategy
+from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
+from repro.sweep.batch import (EngineConfig, build_lanes, concat_lanes,
+                               simulate_lanes)
+from repro.sweep.cache import SweepCache
+from repro.sweep.metrics_jax import batched_metrics
+
+from .spec import Cell, ExperimentSpec, prepare_workload
+
+
+def enable_compilation_cache(path) -> None:
+    """Persist XLA compilations so repeated sweeps skip compile time."""
+    import jax
+    try:
+        pathlib.Path(path).mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(path))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+    except Exception:  # older jax without the persistent cache knobs
+        pass
+
+
+def run_cells(spec: ExperimentSpec,
+              todo: List[Tuple[str, Cell]],
+              store: Optional[SweepCache],
+              fingerprints: Dict[Tuple[str, Cell], Dict],
+              options: Optional[Dict] = None,
+              verbose: bool = True) -> Tuple[Dict, Dict]:
+    """Run ``todo`` cells on the batched engine; one batch per structure."""
+    opts = options or {}
+    if spec.scenario.backfill_depth != DEFAULT_BACKFILL_DEPTH:
+        warnings.warn(
+            "the batched jax engine scans its whole active-set window; "
+            f"backfill_depth={spec.scenario.backfill_depth} keys the cell "
+            "store but does not bound the scan (see sweep/README.md)",
+            stacklevel=2)
+
+    names = [n for n in spec.workloads if any(n == m for m, _ in todo)]
+    wls = {name: prepare_workload(spec, name) for name in names}
+
+    groups = {
+        False: [k for k in todo if not get_strategy(k[1][0]).balanced],
+        True: [k for k in todo if get_strategy(k[1][0]).balanced],
+    }
+    t0 = time.monotonic()
+    metrics: Dict[Tuple[str, Cell], Dict[str, float]] = {}
+    info: Dict[str, object] = {"incomplete": []}
+    for balanced, group in groups.items():
+        if not group:
+            continue
+        batches, t0s, t1s, caps = [], [], [], []
+        for name in names:
+            lanes = [(get_strategy(s), p, sd)
+                     for wname, (s, p, sd) in group if wname == name]
+            if not lanes:
+                continue
+            cl, w_rigid, window = wls[name]
+            batch, _order = build_lanes(w_rigid, cl.nodes, lanes,
+                                        config=spec.transform, tick=cl.tick)
+            batches.append(batch)
+            t0s += [window.t0] * len(lanes)
+            t1s += [window.t1] * len(lanes)
+            caps += [cl.nodes] * len(lanes)
+        big = concat_lanes(batches) if len(batches) > 1 else batches[0]
+        cfg = EngineConfig(balanced=balanced,
+                           window=int(opts.get("window", 0)),
+                           chunk=int(opts.get("chunk", 160)),
+                           expand_backend=opts.get("expand_backend",
+                                                   "bisect"))
+        res = simulate_lanes(big, cfg, verbose=verbose)
+        per_lane = batched_metrics(
+            res, big.submit, big.malleable,
+            (np.asarray(t0s), np.asarray(t1s)), np.asarray(caps))
+        # only completed lanes enter the persistent store: a lane cut off
+        # by the step budget has partial metrics that must not be replayed
+        lane_done = np.all(res["state"] == DONE, axis=1)
+        # group is workload-major, matching the per-name lane stacking
+        for key, m, done in zip(group, per_lane, lane_done):
+            metrics[key] = m
+            if bool(done):
+                if store is not None:
+                    store.put(fingerprints[key], m)
+            else:
+                info["incomplete"].append(key)
+        tag = "balanced" if balanced else "greedy"
+        info[f"{tag}_lanes"] = len(group)
+        info[f"{tag}_steps"] = res["steps"]
+        info[f"{tag}_window"] = res["window"]
+        if not res["finished"]:
+            print(f"[experiment-jax:{'+'.join(names)}] WARNING: {tag} batch "
+                  "hit the step budget with unfinished lanes")
+    info["sim_seconds"] = time.monotonic() - t0
+    info["computed_cells"] = len(todo)
+    return metrics, info

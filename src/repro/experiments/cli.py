@@ -1,0 +1,121 @@
+"""Shared argparse wiring: CLI flags <-> :class:`ExperimentSpec`.
+
+Every grid CLI (``python -m repro.experiments``, ``python -m repro.sweep``,
+``python -m benchmarks.sweep``, ``examples/paper_repro.py``) builds its
+spec through these helpers, so the scenario axes and engine choice are
+uniformly sweepable and no entry point grows a private grid dialect.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import CLUSTERS
+from repro.core.scenario import DEFAULT_BACKFILL_DEPTH, ScenarioConfig
+from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
+                                   SWEEP_PROPORTIONS)
+
+from .spec import ENGINES, ExperimentSpec
+
+
+def add_spec_arguments(ap: argparse.ArgumentParser, *,
+                       default_engine: str = "des",
+                       default_scale: float = 0.2,
+                       default_seeds: int = 3,
+                       single_workload: bool = False) -> None:
+    """Flags that define the experiment (everything in the fingerprint)."""
+    if single_workload:
+        ap.add_argument("--workload", required=True,
+                        choices=sorted(CLUSTERS))
+    else:
+        ap.add_argument("--workload", required=True, nargs="+",
+                        choices=sorted(CLUSTERS),
+                        help="one workload, or several to run as one "
+                             "experiment (the jax engine batches them "
+                             "under a single compilation)")
+    ap.add_argument("--scale", type=float, default=default_scale,
+                    help="trace scale (1.0 = paper-size workloads)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="trace-generator seed")
+    ap.add_argument("--seeds", type=int, default=default_seeds,
+                    help="transform seeds per (strategy, proportion)")
+    ap.add_argument("--proportions", type=float, nargs="*",
+                    default=list(SWEEP_PROPORTIONS))
+    ap.add_argument("--strategies", nargs="*",
+                    default=list(MALLEABLE_STRATEGY_NAMES),
+                    choices=list(MALLEABLE_STRATEGY_NAMES))
+    ap.add_argument("--engine", choices=list(ENGINES),
+                    default=default_engine,
+                    help="des: reference numpy DES (cell-parallel); "
+                         "jax: batched device-resident engine")
+    add_scenario_arguments(ap)
+
+
+def add_scenario_arguments(ap: argparse.ArgumentParser) -> None:
+    """The scenario axes (see repro/core/scenario.py), one flag each.
+
+    Kept separate so CLIs with their own grid flags (``benchmarks/run.py``)
+    still expose every axis — a spec fingerprint covers the full
+    :class:`ScenarioConfig`, so a CLI that hard-defaulted an axis could
+    never reuse artifacts computed with it."""
+    ap.add_argument("--walltime-factor", type=float, default=1.0,
+                    help="scales walltime slack: 0 = exact estimates, "
+                         "1 = the trace's padding, 4 = 4x padding")
+    ap.add_argument("--walltime-jitter", type=float, default=0.0,
+                    help="per-job lognormal spread of walltime slack "
+                         "(heterogeneous estimate accuracy; 0 = uniform)")
+    ap.add_argument("--arrival-compression", type=float, default=1.0,
+                    help="divides submission times: 2.0 doubles the "
+                         "arrival rate at a fixed work mix")
+    ap.add_argument("--backfill-depth", type=int,
+                    default=DEFAULT_BACKFILL_DEPTH,
+                    help="EASY backfill scan depth (DES; the jax engine "
+                         "scans its whole active window)")
+
+
+def scenario_from_args(args: argparse.Namespace) -> ScenarioConfig:
+    return ScenarioConfig(
+        walltime_factor=args.walltime_factor,
+        walltime_jitter=args.walltime_jitter,
+        arrival_compression=args.arrival_compression,
+        backfill_depth=args.backfill_depth,
+    )
+
+
+def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
+    workloads = args.workload
+    if isinstance(workloads, str):
+        workloads = [workloads]
+    return ExperimentSpec(
+        workloads=tuple(workloads),
+        scale=args.scale,
+        trace_seed=args.trace_seed,
+        seeds=args.seeds,
+        proportions=tuple(args.proportions),
+        strategies=tuple(args.strategies),
+        engine=args.engine,
+        scenario=scenario_from_args(args),
+    )
+
+
+def add_backend_arguments(ap: argparse.ArgumentParser, *,
+                          default_cache_dir: str = "artifacts/sweep_cache"
+                          ) -> None:
+    """Results-neutral execution knobs (never part of the fingerprint)."""
+    ap.add_argument("--cache-dir", default=default_cache_dir,
+                    help="shared per-cell result store ('' disables)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="[des] cell-parallel worker processes "
+                         "(0/1 serial, -1 per CPU)")
+    ap.add_argument("--window", type=int, default=0,
+                    help="[jax] active-set window slots (0 = auto)")
+    ap.add_argument("--chunk", type=int, default=160)
+    ap.add_argument("--expand-backend", default="bisect",
+                    choices=["bisect", "pallas", "pallas-interpret"],
+                    help="[jax] Step-3 greedy expand backend: sort-free "
+                         "threshold bisection (default) or the Pallas "
+                         "prefix-waterfill kernel")
+
+
+def backend_options_from_args(args: argparse.Namespace) -> dict:
+    return {"workers": args.workers, "window": args.window,
+            "chunk": args.chunk, "expand_backend": args.expand_backend}

@@ -1,0 +1,84 @@
+"""Renderers over the shared artifact schema (Figs. 6-9 tables, summary).
+
+Consumers of experiment results — ``benchmarks/figures.py``,
+``benchmarks/run.py``, ``examples/paper_repro.py`` — render from the
+aggregate schema :func:`repro.experiments.run_experiment` produces:
+``{"rigid": metrics, "<strategy>@<pct>": aggregated, "_meta": {...}}``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core import improvement
+from repro.core.strategies import MALLEABLE_STRATEGY_NAMES
+
+
+def _strategies_of(results: Dict) -> Sequence[str]:
+    return results.get("_meta", {}).get("strategies",
+                                        MALLEABLE_STRATEGY_NAMES)
+
+
+def render_sweep_table(results: Dict, metrics: Sequence[str] = (
+        "turnaround_mean", "wait_mean", "utilization")) -> str:
+    """Figs 6-9 analogue: strategy x proportion metric tables."""
+    meta = results["_meta"]
+    props = [int(p * 100) for p in meta["proportions"]]
+    out = [f"== Fig 6-9 analogue: {meta['workload']} "
+           f"(scale {meta['scale']}, {meta['seeds']} seeds) =="]
+    for metric in metrics:
+        out.append(f"  {metric}:")
+        hdr = "    strategy  " + "".join(f"{p:>12d}%" for p in props)
+        out.append(hdr)
+        rigid_v = results["rigid"].get(metric, float("nan"))
+        for strat in _strategies_of(results):
+            cells = []
+            for p in props:
+                if p == 0:
+                    v = rigid_v
+                else:
+                    r = results.get(f"{strat}@{p}", {})
+                    v = r.get(f"{metric}_mean", float("nan"))
+                cells.append(f"{v:>13,.1f}" if np.isfinite(v) else
+                             f"{'-':>13}")
+            out.append(f"    {strat:<9}" + "".join(cells))
+    return "\n".join(out)
+
+
+def best_improvements(results: Dict) -> Dict[str, Dict[str, float]]:
+    """Paper-abstract summary: best strategy at 100% vs rigid, per metric."""
+    rigid = results["rigid"]
+    strategies = _strategies_of(results)
+    out = {}
+    for metric, key in (("turnaround", "turnaround_mean"),
+                        ("makespan", "makespan_mean"),
+                        ("wait", "wait_mean")):
+        best, best_strat = None, None
+        for strat in strategies:
+            r = results.get(f"{strat}@100")
+            if not r:
+                continue
+            v = r.get(f"{key}_mean", np.nan)
+            if np.isfinite(v) and (best is None or v < best):
+                best, best_strat = v, strat
+        if best is not None:
+            out[metric] = {"rigid": rigid[key], "best": best,
+                           "strategy": best_strat,
+                           "improvement_pct": improvement(rigid[key], best)}
+    # utilization: higher is better
+    best, best_strat = None, None
+    for strat in strategies:
+        r = results.get(f"{strat}@100")
+        if not r:
+            continue
+        v = r.get("utilization_mean", np.nan)
+        if np.isfinite(v) and (best is None or v > best):
+            best, best_strat = v, strat
+    if best is not None:
+        out["utilization"] = {
+            "rigid": rigid["utilization"], "best": best,
+            "strategy": best_strat,
+            "improvement_pct": 100.0 * (best - rigid["utilization"])
+            / max(rigid["utilization"], 1e-9)}
+    return out

@@ -1,0 +1,162 @@
+"""Declarative experiment specs: one description of the paper grid.
+
+An :class:`ExperimentSpec` names everything that determines a sweep's
+results — workloads, trace identity (seed/scale), the rigid->malleable
+transform configuration, the strategy set, the proportion grid, seeds,
+scenario axes (:class:`repro.core.scenario.ScenarioConfig`) and the engine
+— and nothing that doesn't (worker counts, window sizes and expand
+backends are *backend options*, not spec fields, because they cannot
+change results).
+
+From a spec follow, deterministically:
+
+  * :meth:`ExperimentSpec.cells` — the grid of (strategy, proportion,
+    seed) cells, identical for every backend;
+  * :meth:`ExperimentSpec.cell_fingerprint` — the cell store key content
+    (:mod:`repro.sweep.cache`), so both engines share resume/incremental
+    reuse;
+  * :meth:`ExperimentSpec.fingerprint` / :meth:`ExperimentSpec.key` — a
+    canonical content hash of the whole experiment, used by
+    ``benchmarks/run.py`` to decide whether a sweep artifact on disk is
+    *this* experiment's result or a stale one.
+
+:func:`prepare_workload` is the single place a spec's trace is realized:
+``traces.generate`` + ``apply_scenario``, shared by both backends, the
+crosscheck, and the figure renderers, so every consumer sees bit-identical
+inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import CLUSTERS, Window, apply_scenario, traces
+from repro.core.cluster import Cluster
+from repro.core.jobs import Workload
+from repro.core.scenario import ScenarioConfig
+from repro.core.speedup import TransformConfig
+from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES, STRATEGIES,
+                                   SWEEP_PROPORTIONS)
+from repro.sweep.cache import cell_fingerprint, engine_version
+
+ENGINES = ("des", "jax")
+
+# A cell is (strategy_name, proportion, transform_seed).
+Cell = Tuple[str, float, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything that determines a sweep's results, and nothing else."""
+
+    workloads: Tuple[str, ...]
+    scale: float = 0.2
+    trace_seed: int = 0
+    seeds: int = 3
+    proportions: Tuple[float, ...] = SWEEP_PROPORTIONS
+    strategies: Tuple[str, ...] = MALLEABLE_STRATEGY_NAMES
+    engine: str = "des"
+    transform: TransformConfig = TransformConfig()
+    scenario: ScenarioConfig = ScenarioConfig()
+
+    def __post_init__(self) -> None:
+        # tolerate list/single-string inputs from CLIs and JSON round-trips
+        object.__setattr__(self, "workloads", tuple(
+            [self.workloads] if isinstance(self.workloads, str)
+            else self.workloads))
+        object.__setattr__(self, "proportions",
+                           tuple(float(p) for p in self.proportions))
+        object.__setattr__(self, "strategies", tuple(self.strategies))
+        if isinstance(self.scenario, dict):
+            object.__setattr__(self, "scenario",
+                               ScenarioConfig(**self.scenario))
+        if isinstance(self.transform, dict):
+            t = dict(self.transform)
+            if "e_ref_range" in t:
+                t["e_ref_range"] = tuple(t["e_ref_range"])
+            object.__setattr__(self, "transform", TransformConfig(**t))
+        if not self.workloads:
+            raise ValueError("spec needs at least one workload")
+        for name in self.workloads:
+            if name not in CLUSTERS:
+                raise ValueError(f"unknown workload {name!r}; "
+                                 f"choose from {sorted(CLUSTERS)}")
+        for strat in self.strategies:
+            if strat not in STRATEGIES:
+                raise ValueError(f"unknown strategy {strat!r}")
+            if not STRATEGIES[strat].malleable:
+                raise ValueError(f"strategy {strat!r} is the rigid baseline;"
+                                 " it is implied by proportion 0")
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"choose from {ENGINES}")
+        if self.seeds < 1:
+            raise ValueError("seeds must be >= 1")
+        if not 0.0 < self.scale:
+            raise ValueError("scale must be > 0")
+        for p in self.proportions:
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"proportion {p} outside [0, 1]")
+
+    # -- derived grid ---------------------------------------------------
+    def cells(self) -> List[Cell]:
+        """The cell grid: one rigid baseline + strategy x prop>0 x seed."""
+        out: List[Cell] = [("easy", 0.0, 0)]
+        for strat in self.strategies:
+            for prop in self.proportions:
+                if prop == 0.0:
+                    continue
+                for seed in range(self.seeds):
+                    out.append((strat, float(prop), seed))
+        return out
+
+    def for_workload(self, name: str) -> "ExperimentSpec":
+        """Single-workload slice (per-workload artifacts key on this)."""
+        if name not in self.workloads:
+            raise ValueError(f"{name!r} not in spec workloads")
+        return dataclasses.replace(self, workloads=(name,))
+
+    # -- fingerprints ---------------------------------------------------
+    def fingerprint(self) -> Dict:
+        """Canonical JSON-able content of the whole experiment."""
+        return {
+            "workloads": list(self.workloads),
+            "scale": float(self.scale),
+            "trace_seed": int(self.trace_seed),
+            "seeds": int(self.seeds),
+            "proportions": [float(p) for p in self.proportions],
+            "strategies": list(self.strategies),
+            "engine": self.engine,
+            "engine_version": engine_version(self.engine),
+            "transform": dataclasses.asdict(self.transform),
+            "scenario": dataclasses.asdict(self.scenario),
+        }
+
+    def key(self) -> str:
+        blob = json.dumps(self.fingerprint(), sort_keys=True,
+                          separators=(",", ":")).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def cell_fingerprint(self, workload: str, cell: Cell) -> Dict:
+        """Cell-store key content for one (workload, cell) of this spec."""
+        cl = CLUSTERS[workload]
+        strat, prop, seed = cell
+        return cell_fingerprint(
+            workload, self.trace_seed, self.scale, cl.nodes, cl.tick,
+            strat, prop, seed, engine=self.engine, config=self.transform,
+            scenario=self.scenario)
+
+
+def prepare_workload(spec: ExperimentSpec, name: str
+                     ) -> Tuple[Cluster, Workload, Window]:
+    """Realize one workload of a spec: generate + scenario + window.
+
+    The measurement window is computed *after* the scenario transform, so
+    compressed arrivals get a proportionally compressed window.
+    """
+    cl = CLUSTERS[name]
+    w = traces.generate(name, seed=spec.trace_seed, scale=spec.scale)
+    w = apply_scenario(w, spec.scenario)
+    return cl, w, Window.for_workload(w)

@@ -73,7 +73,7 @@ def waterfill(capacity: jax.Array, target, *, block: int = 2048,
 
 def greedy_shrink_pallas(alloc, floor, priority, need, *,
                          interpret: bool = False):
-    """Pallas-accelerated :func:`repro.core.redistribute.greedy_shrink`."""
+    """Pallas-accelerated :func:`repro.core.passes.greedy_shrink`."""
     alloc = jnp.asarray(alloc, jnp.int32)
     surplus = jnp.maximum(alloc - jnp.asarray(floor, jnp.int32), 0)
     order = jnp.argsort(-jnp.asarray(priority))
@@ -84,7 +84,7 @@ def greedy_shrink_pallas(alloc, floor, priority, need, *,
 
 def greedy_expand_pallas(alloc, cap, priority, idle, *,
                          interpret: bool = False):
-    """Pallas-accelerated :func:`repro.core.redistribute.greedy_expand`."""
+    """Pallas-accelerated :func:`repro.core.passes.greedy_expand`."""
     alloc = jnp.asarray(alloc, jnp.int32)
     room = jnp.maximum(jnp.asarray(cap, jnp.int32) - alloc, 0)
     order = jnp.argsort(jnp.asarray(priority))

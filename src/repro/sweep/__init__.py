@@ -3,16 +3,45 @@
 #
 # - batch:       event-stepped, active-set-windowed batched simulator
 # - metrics_jax: on-device port of repro.core.metrics.run_metrics
-# - cache:       content-hash on-disk result cache (skip completed cells)
-# - runner:      grid orchestration, seed aggregation, DES crosscheck, CLI
-from .batch import (BatchedLanes, EngineConfig, SweepEngineError,
-                    build_lanes, concat_lanes, simulate_lanes)
-from .cache import SweepCache, cell_fingerprint
-from .metrics_jax import batched_metrics
-from .runner import sweep_workload_jax, sweep_workloads_jax
+# - cache:       engine-agnostic content-hash cell store (shared with the
+#                DES backend of repro.experiments)
+# - runner:      jax-engine CLI + back-compat wrappers over the declarative
+#                experiment layer (repro.experiments)
+#
+# Exports resolve lazily (PEP 562) so jax-free consumers — the cell store,
+# the DES experiment backend — can import from this package without paying
+# the jax import.
+from typing import TYPE_CHECKING
 
-__all__ = [
-    "BatchedLanes", "EngineConfig", "SweepEngineError", "build_lanes",
-    "concat_lanes", "simulate_lanes", "SweepCache", "cell_fingerprint",
-    "batched_metrics", "sweep_workload_jax", "sweep_workloads_jax",
-]
+_EXPORTS = {
+    "BatchedLanes": "batch", "EngineConfig": "batch",
+    "SweepEngineError": "batch", "build_lanes": "batch",
+    "concat_lanes": "batch", "simulate_lanes": "batch",
+    "SweepCache": "cache", "cell_fingerprint": "cache",
+    "engine_version": "cache",
+    "batched_metrics": "metrics_jax",
+    "sweep_workload_jax": "runner", "sweep_workloads_jax": "runner",
+}
+
+__all__ = sorted(_EXPORTS)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .batch import (BatchedLanes, EngineConfig, SweepEngineError,
+                        build_lanes, concat_lanes, simulate_lanes)
+    from .cache import SweepCache, cell_fingerprint, engine_version
+    from .metrics_jax import batched_metrics
+    from .runner import sweep_workload_jax, sweep_workloads_jax
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(f".{module}", __name__), name)

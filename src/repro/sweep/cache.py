@@ -1,20 +1,29 @@
-"""On-disk result cache for sweep cells.
+"""Engine-agnostic on-disk cell store for experiment grids.
 
-A *cell* is one (trace spec, scale, strategy, proportion, seed) simulation.
-Its cache key is the SHA-256 of a canonical-JSON fingerprint that includes
-everything that determines the metrics:
+A *cell* is one (trace spec, scenario, scale, strategy, proportion, seed)
+simulation on one engine.  Its cache key is the SHA-256 of a canonical-JSON
+fingerprint that includes everything that determines the metrics:
 
   * trace identity: generator name, trace seed, scale;
   * cluster: capacity, tick;
   * cell: strategy name, malleable proportion, transform seed;
   * transform configuration (efficiency thresholds and caps);
-  * engine identity: ``{des,jax}`` + :data:`repro.sweep.batch.ENGINE_VERSION`
-    (bumped whenever engine semantics change, so stale entries can never be
-    replayed as fresh results).
+  * scenario axes (walltime accuracy, arrival compression, backfill depth
+    — see :mod:`repro.core.scenario`);
+  * engine identity: ``{des,jax}`` + that engine's version (bumped whenever
+    its semantics change, so stale entries can never be replayed as fresh
+    results).
 
 Entries are one small JSON file per cell, sharded by the first two key hex
-chars; repeated sweeps skip completed cells and a partially-failed sweep
-resumes where it stopped.
+chars.  Both experiment backends (:mod:`repro.experiments.backend_des`,
+:mod:`repro.experiments.backend_jax`) write completed cells through this
+store as they finish, so repeated sweeps skip completed cells, an
+interrupted sweep resumes where it stopped, and the DES crosscheck reads
+reference cells (des-engine fingerprints) an earlier sweep or crosscheck
+already paid for.
+
+This module never imports jax: the DES backend stays accelerator-free, and
+the jax engine version is resolved lazily from :mod:`repro.sweep.batch`.
 """
 from __future__ import annotations
 
@@ -24,15 +33,30 @@ import json
 import pathlib
 from typing import Dict, Optional
 
+from repro.core.scenario import ScenarioConfig
 from repro.core.speedup import TransformConfig
 
-from .batch import ENGINE_VERSION
+# Version of the reference numpy DES substrate (core/simulator.py).  Bump
+# whenever its event/scheduling semantics change so stored DES cells are
+# invalidated alongside the jax ENGINE_VERSION mechanism.
+DES_ENGINE_VERSION = 1
+
+
+def engine_version(engine: str) -> int:
+    """Cache-invalidation version of ``engine`` (``des`` or ``jax``)."""
+    if engine == "des":
+        return DES_ENGINE_VERSION
+    if engine == "jax":
+        from .batch import ENGINE_VERSION  # lazy: keeps the DES path jax-free
+        return ENGINE_VERSION
+    raise ValueError(f"unknown engine {engine!r}; choose des or jax")
 
 
 def cell_fingerprint(workload: str, trace_seed: int, scale: float,
                      capacity: int, tick: float, strategy: str,
                      proportion: float, seed: int, engine: str,
-                     config: TransformConfig = TransformConfig()) -> Dict:
+                     config: TransformConfig = TransformConfig(),
+                     scenario: ScenarioConfig = ScenarioConfig()) -> Dict:
     """The canonical content of a cell's cache key (JSON-serializable)."""
     return {
         "workload": workload,
@@ -44,8 +68,9 @@ def cell_fingerprint(workload: str, trace_seed: int, scale: float,
         "proportion": float(proportion),
         "seed": int(seed),
         "engine": engine,
-        "engine_version": ENGINE_VERSION,
+        "engine_version": engine_version(engine),
         "transform": dataclasses.asdict(config),
+        "scenario": dataclasses.asdict(scenario),
     }
 
 

@@ -1,24 +1,16 @@
-"""Sweep-grid orchestration for the batched device-resident engine.
+"""Back-compat layer: the jax-engine sweep as a declarative experiment.
 
-Evaluates the paper's (strategy x proportion x seed) grid for one *or
-several* workloads in a single process: greedy-structured strategies
-(EASY/MIN/PREF/KEEPPREF) share one engine batch and one compilation, AVG
-runs in a second balanced batch.  With multiple workloads the lanes of all
-clusters are padded and stacked into the same batch
-(:func:`repro.sweep.batch.concat_lanes`) — capacity and tick are per-lane
-data, so a single compilation serves all four supercomputer grids and the
-per-cell results are identical to per-cluster runs.  Per-cell metrics come
-back through :mod:`metrics_jax`, get cached by content hash
-(:mod:`cache`), and are aggregated with the existing
-:func:`repro.core.metrics.aggregate_seeds` so downstream consumers
-(``benchmarks/figures.py``, ``best_improvements``) see the exact result
-shape the looped DES sweep produces.
+Grid orchestration moved to :mod:`repro.experiments` (one spec -> backend
+-> cell store -> artifact pipeline for both engines); this module keeps
+the historical entry points alive:
 
-``--crosscheck N`` re-runs N cells through the numpy DES and reports
-per-metric deltas against the documented engine fidelity gaps (see
-``sweep/README.md``).  Cells are sampled from a seeded RNG
-(``--crosscheck-seed``, default 0) over the sorted cell list, so CI reruns
-check the same cells.
+  * ``python -m repro.sweep`` == ``python -m repro.experiments --engine
+    jax`` (same flags, scenario axes included);
+  * :func:`sweep_workload_jax` / :func:`sweep_workloads_jax` wrappers that
+    build an :class:`repro.experiments.ExperimentSpec` and run it;
+  * :data:`CROSSCHECK_TOLERANCES` / :func:`enable_compilation_cache`
+    re-exports (now owned by ``repro.experiments.crosscheck`` and
+    ``repro.experiments.backend_jax``).
 
 CLI::
 
@@ -29,54 +21,17 @@ CLI::
 """
 from __future__ import annotations
 
-import argparse
-import json
-import pathlib
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import sys
+from typing import Dict, Optional, Sequence
 
-import numpy as np
-
-from repro.core import (CLUSTERS, DONE, Window, aggregate_seeds,
-                        get_strategy, run_metrics, simulate, traces,
-                        transform_rigid_to_malleable)
 from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
                                    SWEEP_PROPORTIONS)
-
-from .batch import EngineConfig, build_lanes, concat_lanes, simulate_lanes
-from .cache import SweepCache, cell_fingerprint
-from .metrics_jax import batched_metrics
+from repro.experiments import ExperimentSpec, run_experiment
+from repro.experiments.backend_jax import enable_compilation_cache  # noqa: F401 (re-export)
+from repro.experiments.crosscheck import CROSSCHECK_TOLERANCES  # noqa: F401 (re-export)
 
 PROPORTIONS = SWEEP_PROPORTIONS
 MALLEABLE_STRATEGIES = MALLEABLE_STRATEGY_NAMES
-
-# Crosscheck tolerances vs. the numpy DES: (relative, absolute).  The two
-# engines differ by documented approximations (tick-quantized completions,
-# cumulative-round shadow-time backfill vs. the DES's sequential scan,
-# FCFS tie-breaks, converge-over-ticks scheduling), so these bound the
-# *expected* methodology gap, not float noise.  Tightened for engine v2:
-# the batched engine now honours the EASY head reservation (shadow time),
-# which removed the dominant backfill-lite error term.  Absolute floors
-# are in the metric's own unit and matter where the reference value is
-# near zero (e.g. wait at low contention).
-CROSSCHECK_TOLERANCES = {
-    "turnaround_mean": (0.08, 45.0),
-    "makespan_mean": (0.08, 45.0),
-    "wait_mean": (0.20, 90.0),
-    "utilization": (0.05, 0.015),
-}
-
-
-def _grid_cells(proportions, strategies, seeds
-                ) -> List[Tuple[str, float, int]]:
-    cells = [("easy", 0.0, 0)]
-    for strat in strategies:
-        for prop in proportions:
-            if prop == 0.0:
-                continue
-            for seed in range(seeds):
-                cells.append((strat, float(prop), seed))
-    return cells
 
 
 def sweep_workloads_jax(
@@ -95,131 +50,21 @@ def sweep_workloads_jax(
     expand_backend: str = "bisect",
     verbose: bool = True,
 ) -> Dict[str, Dict]:
-    """Batched-engine sweep over one or more workloads, one batch per
-    engine structure.
+    """Batched-engine sweep over one or more workloads (spec-routed).
 
-    Returns ``{workload: results}`` where each ``results`` has the same
-    ``{"rigid": ..., "strat@NN": ..., "_meta": ...}`` aggregate shape the
-    looped DES sweep produces, plus ``_engine`` wall-clock info and
-    (optionally) ``_crosscheck`` DES-delta records.
+    Returns ``{workload: results}`` in the shared artifact schema
+    (see :func:`repro.experiments.run_experiment`).
     """
-    names = list(names)
-    wls = {}
-    for name in names:
-        cl = CLUSTERS[name]
-        w_rigid = traces.generate(name, seed=trace_seed, scale=scale)
-        wls[name] = (cl, w_rigid, Window.for_workload(w_rigid))
-    cache = SweepCache(cache_dir) if cache_dir else None
-
-    cells = _grid_cells(proportions, strategies, seeds)
-    fingerprints = {
-        (name, cell): cell_fingerprint(
-            name, trace_seed, scale, wls[name][0].nodes, wls[name][0].tick,
-            cell[0], cell[1], cell[2], engine="jax")
-        for name in names for cell in cells
-    }
-    metrics: Dict[Tuple[str, Tuple[str, float, int]], Dict[str, float]] = {}
-    if cache is not None:
-        for key, fp in fingerprints.items():
-            hit = cache.get(fp)
-            if hit is not None:
-                metrics[key] = hit
-
-    todo = [(name, c) for name in names for c in cells
-            if (name, c) not in metrics]
-    groups = {
-        False: [k for k in todo if not get_strategy(k[1][0]).balanced],
-        True: [k for k in todo if get_strategy(k[1][0]).balanced],
-    }
-    t0 = time.monotonic()
-    engine_info: Dict[str, float] = {}
-    for balanced, group in groups.items():
-        if not group:
-            continue
-        batches, t0s, t1s, caps = [], [], [], []
-        for name in names:
-            lanes = [(get_strategy(s), p, sd)
-                     for wname, (s, p, sd) in group if wname == name]
-            if not lanes:
-                continue
-            cl, w_rigid, window = wls[name]
-            batch, _order = build_lanes(w_rigid, cl.nodes, lanes,
-                                        tick=cl.tick)
-            batches.append(batch)
-            t0s += [window.t0] * len(lanes)
-            t1s += [window.t1] * len(lanes)
-            caps += [cl.nodes] * len(lanes)
-        big = concat_lanes(batches) if len(batches) > 1 else batches[0]
-        cfg = EngineConfig(balanced=balanced, window=window_slots,
-                           chunk=chunk, expand_backend=expand_backend)
-        res = simulate_lanes(big, cfg, verbose=verbose)
-        per_lane = batched_metrics(
-            res, big.submit, big.malleable,
-            (np.asarray(t0s), np.asarray(t1s)), np.asarray(caps))
-        # only completed lanes enter the persistent cache: a lane cut off
-        # by the step budget has partial metrics that must not be replayed
-        lane_done = np.all(res["state"] == DONE, axis=1)
-        # group is workload-major (todo iterates names outer), matching
-        # the per-name lane stacking above
-        for key, m, done in zip(group, per_lane, lane_done):
-            metrics[key] = m
-            if cache is not None and bool(done):
-                cache.put(fingerprints[key], m)
-        tag = "balanced" if balanced else "greedy"
-        engine_info[f"{tag}_lanes"] = len(group)
-        engine_info[f"{tag}_steps"] = res["steps"]
-        engine_info[f"{tag}_window"] = res["window"]
-        if not res["finished"]:
-            print(f"[sweep-jax:{'+'.join(names)}] WARNING: {tag} batch hit "
-                  "the step budget with unfinished lanes")
-    engine_info["sim_seconds"] = time.monotonic() - t0
-    engine_info["workloads"] = len(names)
-    if cache is not None:
-        engine_info["cache_hits"] = cache.hits
-
-    # -- assemble the looped-sweep result shape per workload --------------
-    out: Dict[str, Dict] = {}
-    for name in names:
-        wl_metrics = {c: metrics[(name, c)] for c in cells}
-        rigid = wl_metrics[("easy", 0.0, 0)]
-        results: Dict[str, Dict] = {"rigid": rigid}
-        for strat in strategies:
-            for prop in proportions:
-                if prop == 0.0:
-                    results[f"{strat}@0"] = rigid
-                    continue
-                per_seed = [wl_metrics[(strat, float(prop), sd)]
-                            for sd in range(seeds)]
-                agg = aggregate_seeds(per_seed)
-                results[f"{strat}@{int(prop * 100)}"] = agg
-                if verbose:
-                    print(f"[sweep-jax:{name}] {strat}@{int(prop * 100)}%: "
-                          f"turnaround={agg['turnaround_mean_mean']:,.0f}"
-                          f"±{agg['turnaround_mean_iqr']:,.0f} "
-                          f"wait={agg['wait_mean_mean']:,.0f} "
-                          f"util={agg['utilization_mean']:.3f} "
-                          f"expand/job={agg['expand_per_job_mean']:.1f} "
-                          f"shrink/job={agg['shrink_per_job_mean']:.1f}")
-        results["_meta"] = {"workload": name, "scale": scale, "seeds": seeds,
-                            "proportions": list(proportions),
-                            "engine": "jax"}
-        # engine stats are whole-batch (one compilation covers every
-        # workload); only the lane count is per-workload
-        results["_engine"] = {
-            **engine_info, "scope": "batch",
-            "workload_lanes": sum(1 for n, _ in todo if n == name),
-        }
-        if crosscheck:
-            t_cc = time.monotonic()
-            results["_crosscheck"] = crosscheck_cells(
-                name, wl_metrics, n_cells=crosscheck, scale=scale,
-                trace_seed=trace_seed, rng_seed=crosscheck_seed,
-                verbose=verbose)
-            # DES re-runs are reference work, not engine time: recorded so
-            # benchmarks can separate them from the engine wall-clock
-            results["_crosscheck"]["seconds"] = time.monotonic() - t_cc
-        out[name] = results
-    return out
+    spec = ExperimentSpec(
+        workloads=tuple(names), scale=scale, trace_seed=trace_seed,
+        seeds=seeds, proportions=tuple(proportions),
+        strategies=tuple(strategies), engine="jax")
+    return run_experiment(
+        spec, cache_dir=cache_dir,
+        backend_options={"window": window_slots, "chunk": chunk,
+                         "expand_backend": expand_backend},
+        crosscheck=crosscheck, crosscheck_seed=crosscheck_seed,
+        verbose=verbose)
 
 
 def sweep_workload_jax(name: str, **kw) -> Dict:
@@ -228,131 +73,11 @@ def sweep_workload_jax(name: str, **kw) -> Dict:
     return sweep_workloads_jax([name], **kw)[name]
 
 
-def crosscheck_cells(name: str, metrics: Dict, *, n_cells: int,
-                     scale: float, trace_seed: int = 0, rng_seed: int = 0,
-                     verbose: bool = True) -> Dict:
-    """Re-run sampled cells through the numpy DES; report metric deltas.
-
-    Cells are drawn without replacement from the *sorted* cell list by a
-    generator seeded with ``rng_seed``, so repeated runs over the same grid
-    (e.g. CI) always check the same cells.
-    """
-    cl = CLUSTERS[name]
-    w_rigid = traces.generate(name, seed=trace_seed, scale=scale)
-    window = Window.for_workload(w_rigid)
-    cells = sorted(metrics)
-    rng = np.random.default_rng(rng_seed)
-    picked = [cells[i] for i in
-              rng.choice(len(cells), size=min(n_cells, len(cells)),
-                         replace=False)]
-    records = []
-    for strat, prop, seed in picked:
-        wm = (w_rigid if prop == 0.0 else
-              transform_rigid_to_malleable(w_rigid, prop, seed, cl.nodes))
-        ref = run_metrics(simulate(wm, cl, get_strategy(strat)),
-                          wm, cl, window)
-        jaxm = metrics[(strat, prop, seed)]
-        deltas = {}
-        ok = True
-        for key, (rtol, atol) in CROSSCHECK_TOLERANCES.items():
-            a, b = ref[key], jaxm[key]
-            if not (np.isfinite(a) and np.isfinite(b)):
-                continue
-            err = abs(b - a)
-            within = bool(err <= max(rtol * abs(a), atol))
-            ok &= within
-            deltas[key] = {"des": a, "jax": b, "abs_err": err,
-                           "within": within}
-        records.append({"cell": f"{strat}@{int(prop * 100)}%/s{seed}",
-                        "within_tolerance": ok, "deltas": deltas})
-        if verbose:
-            worst = max(deltas.values(),
-                        key=lambda d: d["abs_err"] / max(abs(d["des"]), 1e-9))
-            print(f"[crosscheck:{name}] {strat}@{int(prop * 100)}%/s{seed}: "
-                  f"{'OK' if ok else 'EXCEEDS TOLERANCE'} "
-                  f"(worst rel err "
-                  f"{worst['abs_err'] / max(abs(worst['des']), 1e-9):.1%})")
-    return {"cells": records,
-            "rng_seed": rng_seed,
-            "all_within_tolerance": all(r["within_tolerance"]
-                                        for r in records)}
-
-
-def enable_compilation_cache(path) -> None:
-    """Persist XLA compilations so repeated sweeps skip compile time."""
-    import jax
-    try:
-        pathlib.Path(path).mkdir(parents=True, exist_ok=True)
-        jax.config.update("jax_compilation_cache_dir", str(path))
-        jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
-    except Exception:  # older jax without the persistent cache knobs
-        pass
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--workload", required=True, nargs="+",
-                    choices=sorted(CLUSTERS),
-                    help="one workload, or several to run as a single "
-                         "multi-cluster batch (one compilation)")
-    ap.add_argument("--scale", type=float, default=0.2)
-    ap.add_argument("--seeds", type=int, default=3)
-    ap.add_argument("--proportions", type=float, nargs="*",
-                    default=list(PROPORTIONS))
-    ap.add_argument("--crosscheck", type=int, default=0,
-                    help="re-run N seeded-sampled cells through the numpy "
-                         "DES (per workload)")
-    ap.add_argument("--crosscheck-seed", type=int, default=0,
-                    help="RNG seed for crosscheck cell sampling (fixed so "
-                         "CI reruns check the same cells)")
-    ap.add_argument("--require-crosscheck", action="store_true",
-                    help="exit non-zero when any crosschecked cell exceeds "
-                         "CROSSCHECK_TOLERANCES (CI regression gate)")
-    ap.add_argument("--cache-dir", default="artifacts/sweep_cache",
-                    help="per-cell result cache ('' disables)")
-    ap.add_argument("--window", type=int, default=0,
-                    help="active-set window slots (0 = auto)")
-    ap.add_argument("--chunk", type=int, default=160)
-    ap.add_argument("--expand-backend", default="bisect",
-                    choices=["bisect", "pallas", "pallas-interpret"],
-                    help="Step-3 greedy expand backend: sort-free "
-                         "threshold bisection (default) or the Pallas "
-                         "prefix-waterfill kernel")
-    ap.add_argument("--out", default="")
-    args = ap.parse_args(argv)
-    if args.require_crosscheck and not args.crosscheck:
-        ap.error("--require-crosscheck needs --crosscheck N")
-
-    if args.cache_dir:
-        enable_compilation_cache(
-            pathlib.Path(args.cache_dir).parent / "xla_cache")
-    all_results = sweep_workloads_jax(
-        args.workload, scale=args.scale, seeds=args.seeds,
-        proportions=tuple(args.proportions), crosscheck=args.crosscheck,
-        crosscheck_seed=args.crosscheck_seed,
-        cache_dir=args.cache_dir or None, window_slots=args.window,
-        chunk=args.chunk, expand_backend=args.expand_backend)
-    tag = "+".join(args.workload)
-    info = next(iter(all_results.values()))["_engine"]
-    print(f"[sweep-jax:{tag}] engine wall {info['sim_seconds']:.1f}s "
-          f"({info})")
-    if args.out:
-        path = pathlib.Path(args.out)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        payload = (all_results[args.workload[0]]
-                   if len(args.workload) == 1 else all_results)
-        path.write_text(json.dumps({"results": payload}, indent=1,
-                                   default=float))
-        print(f"[sweep-jax:{tag}] wrote {path}")
-    if args.require_crosscheck:
-        bad = [name for name, r in all_results.items()
-               if not r.get("_crosscheck", {}).get("all_within_tolerance",
-                                                   True)]
-        if bad:
-            print(f"[sweep-jax:{tag}] crosscheck EXCEEDED tolerance for: "
-                  f"{', '.join(bad)}")
-            return 1
-    return 0
+def main(argv=None) -> int:
+    """Delegate to the canonical experiment CLI with the jax engine."""
+    from repro.experiments.__main__ import main as experiments_main
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return experiments_main(["--engine", "jax"] + argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,305 @@
+"""Tests for the declarative experiment layer (repro.experiments).
+
+Covers the spec fingerprint (round-trip stability + invalidation on every
+axis), the scenario workload transforms, the shared cell store (DES hit on
+second run, incremental cross-spec reuse, parallel == serial determinism),
+the stale-artifact guard for whole-file sweep reuse, and JAX-vs-DES parity
+through the *same* spec entry point.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ScenarioConfig, apply_scenario, traces
+from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
+from repro.core.speedup import TransformConfig
+from repro.experiments import (ExperimentSpec, load_artifact_results,
+                               run_experiment, write_artifact)
+from repro.experiments.cli import (add_backend_arguments,
+                                   add_spec_arguments,
+                                   backend_options_from_args,
+                                   spec_from_args)
+from repro.sweep import cache as cache_mod
+from repro.sweep.cache import SweepCache
+
+TINY = dict(workloads=("haswell",), scale=0.003, seeds=2,
+            proportions=(0.0, 1.0), strategies=("min", "avg"))
+
+
+def _results_equal(a, b):
+    for k in a:
+        if k.startswith("_"):
+            continue
+        assert a[k] == b[k], k
+
+
+# ----------------------------------------------------------------------
+# spec fingerprints
+def test_spec_key_stable_across_instances():
+    assert ExperimentSpec(**TINY).key() == ExperimentSpec(**TINY).key()
+    # list inputs normalize to the same canonical spec
+    lst = dict(TINY, workloads=["haswell"], proportions=[0.0, 1.0],
+               strategies=["min", "avg"])
+    assert ExperimentSpec(**lst).key() == ExperimentSpec(**TINY).key()
+
+
+@pytest.mark.parametrize("change", [
+    {"scale": 0.004},
+    {"seeds": 3},
+    {"trace_seed": 1},
+    {"engine": "jax"},
+    {"proportions": (0.0, 0.5, 1.0)},
+    {"strategies": ("min",)},
+    {"transform": TransformConfig(e_pref=0.8)},
+    {"scenario": ScenarioConfig(walltime_factor=0.0)},
+    {"scenario": ScenarioConfig(walltime_jitter=0.5)},
+    {"scenario": ScenarioConfig(arrival_compression=2.0)},
+    {"scenario": ScenarioConfig(backfill_depth=16)},
+])
+def test_spec_key_invalidation(change):
+    base = ExperimentSpec(**TINY)
+    other = dataclasses.replace(base, **change)
+    assert other.key() != base.key(), change
+
+
+def test_spec_key_tracks_engine_version(monkeypatch):
+    base = ExperimentSpec(**TINY)
+    k0 = base.key()
+    monkeypatch.setattr(cache_mod, "DES_ENGINE_VERSION",
+                        cache_mod.DES_ENGINE_VERSION + 1)
+    assert base.key() != k0
+
+
+@pytest.mark.parametrize("change", [
+    {"scenario": ScenarioConfig(walltime_factor=4.0)},
+    {"scenario": ScenarioConfig(arrival_compression=0.5)},
+    {"scenario": ScenarioConfig(backfill_depth=8)},
+    {"trace_seed": 7},
+])
+def test_cell_fingerprint_tracks_scenario_axes(change):
+    base = ExperimentSpec(**TINY)
+    cell = ("min", 1.0, 0)
+    k0 = SweepCache.key(base.cell_fingerprint("haswell", cell))
+    other = dataclasses.replace(base, **change)
+    assert SweepCache.key(other.cell_fingerprint("haswell", cell)) != k0
+
+
+def test_spec_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        ExperimentSpec(workloads=("nope",))
+    with pytest.raises(ValueError):
+        ExperimentSpec(workloads=("knl",), engine="tpu")
+    with pytest.raises(ValueError):
+        ExperimentSpec(workloads=("knl",), strategies=("easy",))
+    with pytest.raises(ValueError):
+        ExperimentSpec(workloads=("knl",), proportions=(1.5,))
+    with pytest.raises(ValueError):
+        ScenarioConfig(arrival_compression=0.0)
+    with pytest.raises(ValueError):  # crosscheck is jax-vs-DES only
+        run_experiment(ExperimentSpec(**TINY, engine="des"), crosscheck=2)
+
+
+# ----------------------------------------------------------------------
+# scenario workload transforms
+def test_apply_scenario_axes():
+    w = traces.generate("haswell", seed=0, scale=0.003)
+    # identity: default scenario returns the same object (no copy)
+    assert apply_scenario(w, ScenarioConfig()) is w
+    sc = apply_scenario(w, ScenarioConfig(walltime_factor=0.0,
+                                          arrival_compression=2.0))
+    np.testing.assert_allclose(sc.submit, w.submit / 2.0)
+    assert np.all(np.diff(sc.submit) >= 0)  # FCFS order preserved
+    np.testing.assert_allclose(sc.walltime, sc.runtime)  # exact estimates
+    sc.validate()
+    wide = apply_scenario(w, ScenarioConfig(walltime_factor=4.0))
+    np.testing.assert_allclose(wide.walltime / wide.runtime, 2.0)
+    assert w.walltime[0] == pytest.approx(1.25 * w.runtime[0])  # untouched
+    jit = apply_scenario(w, ScenarioConfig(walltime_jitter=1.0))
+    jit.validate()
+    ratios = jit.walltime / jit.runtime
+    assert ratios.std() > 0  # heterogeneous estimates
+    assert np.all(ratios >= 1.0)
+    # deterministic: the jitter is part of the scenario identity
+    again = apply_scenario(w, ScenarioConfig(walltime_jitter=1.0))
+    np.testing.assert_array_equal(jit.walltime, again.walltime)
+
+
+_CONTENDED = dict(workloads=("theta",), scale=0.05, seeds=1,
+                  proportions=(0.0,), strategies=("min",))
+
+
+def test_uniform_walltime_factor_is_schedule_invariant():
+    """The twins pad walltime uniformly (125% rule), and a global rescale
+    of homogeneous slack cancels out of every EASY shadow/fit comparison
+    — the schedule, and hence the metrics, are bit-identical."""
+    base = ExperimentSpec(
+        **_CONTENDED,
+        scenario=ScenarioConfig(arrival_compression=6.0))
+    wide = dataclasses.replace(base, scenario=ScenarioConfig(
+        arrival_compression=6.0, walltime_factor=40.0))
+    a = run_experiment(base, verbose=False)["theta"]["rigid"]
+    b = run_experiment(wide, verbose=False)["theta"]["rigid"]
+    assert a["wait_mean"] > 60.0  # the grid is actually contended
+    assert a == b
+
+
+def test_walltime_jitter_changes_backfill_schedule():
+    """Heterogeneous estimates (some tight, some padded) change which
+    candidates EASY backfills — the Chadha-style accuracy axis."""
+    base = ExperimentSpec(
+        **_CONTENDED,
+        scenario=ScenarioConfig(arrival_compression=6.0))
+    jit = dataclasses.replace(base, scenario=ScenarioConfig(
+        arrival_compression=6.0, walltime_jitter=1.5))
+    a = run_experiment(base, verbose=False)["theta"]["rigid"]
+    b = run_experiment(jit, verbose=False)["theta"]["rigid"]
+    assert a["wait_mean"] != b["wait_mean"]
+
+
+# ----------------------------------------------------------------------
+# cell store: resume, incremental reuse, determinism
+def test_des_store_hit_on_second_run(tmp_path):
+    spec = ExperimentSpec(**TINY)
+    first = run_experiment(spec, cache_dir=tmp_path, verbose=False)
+    again = run_experiment(spec, cache_dir=tmp_path, verbose=False)
+    info = again["haswell"]["_engine"]
+    assert info["computed_cells"] == 0
+    assert info["cache_hits"] == len(spec.cells())
+    _results_equal(first["haswell"], again["haswell"])
+
+
+def test_store_shared_across_specs_incrementally(tmp_path):
+    small = ExperimentSpec(**dict(TINY, strategies=("min",)))
+    run_experiment(small, cache_dir=tmp_path, verbose=False)
+    grown = ExperimentSpec(**TINY)  # adds the avg lanes
+    info = run_experiment(grown, cache_dir=tmp_path,
+                          verbose=False)["haswell"]["_engine"]
+    assert info["cache_hits"] == len(small.cells())
+    assert info["computed_cells"] == len(grown.cells()) - len(small.cells())
+
+
+def test_parallel_des_matches_serial_bitwise():
+    spec = ExperimentSpec(**TINY)
+    serial = run_experiment(spec, verbose=False)["haswell"]
+    par = run_experiment(spec, backend_options={"workers": 2},
+                         verbose=False)["haswell"]
+    _results_equal(serial, par)  # exact equality, not approx
+
+
+# ----------------------------------------------------------------------
+# whole-file artifact reuse (the benchmarks/run.py stale-artifact guard)
+def test_stale_artifact_from_other_scale_not_reused(tmp_path):
+    spec = ExperimentSpec(**TINY)
+    results = run_experiment(spec, verbose=False)["haswell"]
+    path = tmp_path / "sweep-haswell.json"
+    write_artifact(path, results)
+
+    assert load_artifact_results(path, spec, "haswell") is not None
+    for stale in (dataclasses.replace(spec, scale=0.004),
+                  dataclasses.replace(spec, seeds=3),
+                  dataclasses.replace(spec, engine="jax"),
+                  dataclasses.replace(
+                      spec, scenario=ScenarioConfig(walltime_factor=0.0))):
+        assert load_artifact_results(path, stale, "haswell") is None
+
+    # legacy artifact without a spec fingerprint is never reused
+    legacy = tmp_path / "sweep-legacy.json"
+    payload = json.loads(path.read_text())
+    del payload["results"]["_meta"]["spec_key"]
+    legacy.write_text(json.dumps(payload))
+    assert load_artifact_results(legacy, spec, "haswell") is None
+
+
+def test_incomplete_artifact_never_reused(tmp_path):
+    """Partial metrics (jax step-budget cutoff) must not be replayed."""
+    spec = ExperimentSpec(**TINY)
+    results = run_experiment(spec, verbose=False)["haswell"]
+    assert results["_engine"]["incomplete_cells"] == 0
+    results["_engine"]["incomplete_cells"] = 3  # as backend_jax reports
+    path = tmp_path / "sweep-haswell.json"
+    write_artifact(path, results)
+    assert load_artifact_results(path, spec, "haswell") is None
+
+
+def test_crosscheck_reads_des_cells_from_store(tmp_path):
+    """The crosscheck reuses DES reference cells the store already holds
+    (and writes the ones it computes)."""
+    from repro.experiments.crosscheck import crosscheck_cells
+    des_spec = ExperimentSpec(**TINY, engine="des")
+    run_experiment(des_spec, cache_dir=tmp_path, verbose=False)
+    store = SweepCache(tmp_path)
+    jax_spec = dataclasses.replace(des_spec, engine="jax")
+    # feed the DES metrics in as the "engine" results: deltas are zero,
+    # and every reference must come from the store, not a re-simulation
+    metrics = {cell: store.get(des_spec.cell_fingerprint("haswell", cell))
+               for cell in des_spec.cells()}
+    store.hits = 0
+    report = crosscheck_cells(jax_spec, "haswell", metrics, n_cells=3,
+                              store=store, verbose=False)
+    assert report["store_hits"] == 3
+    assert report["all_within_tolerance"]
+    # an empty sample verified nothing: the gate must fail, not pass
+    empty = crosscheck_cells(jax_spec, "haswell", {}, n_cells=3,
+                             store=store, verbose=False)
+    assert not empty["all_within_tolerance"]
+
+
+# ----------------------------------------------------------------------
+# CLI wiring: scenario axes sweepable on both engines
+@pytest.mark.parametrize("engine", ["des", "jax"])
+def test_cli_roundtrip_scenario_axes(engine):
+    import argparse
+    ap = argparse.ArgumentParser()
+    add_spec_arguments(ap)
+    add_backend_arguments(ap)
+    args = ap.parse_args([
+        "--workload", "knl", "--engine", engine, "--scale", "0.01",
+        "--walltime-factor", "0.5", "--walltime-jitter", "0.8",
+        "--arrival-compression", "3.0",
+        "--backfill-depth", "64", "--workers", "2", "--window", "32"])
+    spec = spec_from_args(args)
+    assert spec.engine == engine
+    assert spec.scenario == ScenarioConfig(walltime_factor=0.5,
+                                           walltime_jitter=0.8,
+                                           arrival_compression=3.0,
+                                           backfill_depth=64)
+    opts = backend_options_from_args(args)
+    assert opts["workers"] == 2 and opts["window"] == 32
+
+
+def test_cli_default_backfill_depth_matches_des_default():
+    import inspect
+    from repro.core.simulator import Simulator
+    sig = inspect.signature(Simulator.__init__)
+    assert sig.parameters["backfill_depth"].default == DEFAULT_BACKFILL_DEPTH
+
+
+# ----------------------------------------------------------------------
+# backend parity through the same spec entry point
+def test_jax_des_backend_parity_same_spec(tmp_path):
+    from repro.experiments.crosscheck import CROSSCHECK_TOLERANCES
+    base = dict(TINY, seeds=1, strategies=("min", "keeppref"))
+    des = run_experiment(ExperimentSpec(**base, engine="des"),
+                         cache_dir=tmp_path / "store",
+                         verbose=False)["haswell"]
+    jx = run_experiment(ExperimentSpec(**base, engine="jax"),
+                        cache_dir=tmp_path / "store",
+                        backend_options={"window": 32, "chunk": 64},
+                        verbose=False)["haswell"]
+    assert des["_meta"]["spec_key"] != jx["_meta"]["spec_key"]
+    for cell_key in ("rigid", "min@100", "keeppref@100"):
+        suffix = "" if cell_key == "rigid" else "_mean"
+        for metric, (rtol, atol) in CROSSCHECK_TOLERANCES.items():
+            a = des[cell_key][metric + suffix]
+            b = jx[cell_key][metric + suffix]
+            assert abs(b - a) <= max(rtol * abs(a), atol), (cell_key, metric)
+    # both engines wrote their cells through the same store
+    store = SweepCache(tmp_path / "store")
+    spec_jax = ExperimentSpec(**base, engine="jax")
+    spec_des = ExperimentSpec(**base, engine="des")
+    for spec in (spec_des, spec_jax):
+        for cell in spec.cells():
+            assert store.get(spec.cell_fingerprint("haswell", cell)) \
+                is not None, (spec.engine, cell)

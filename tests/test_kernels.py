@@ -11,7 +11,7 @@ import pytest
 
 from repro.kernels import flash_attention, ref, rmsnorm, ssd_scan, waterfill
 from repro.kernels.waterfill import greedy_expand_pallas, greedy_shrink_pallas
-from repro.core.redistribute import greedy_expand, greedy_shrink
+from repro.core.passes import greedy_expand, greedy_shrink
 
 
 def _tol(dtype):

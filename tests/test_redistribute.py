@@ -7,8 +7,8 @@ hypothesis.
 import numpy as np
 import pytest
 
-from repro.core.redistribute import (balanced_expand, balanced_shrink,
-                                     greedy_expand, greedy_shrink)
+from repro.core.passes import (balanced_expand, balanced_shrink,
+                               greedy_expand, greedy_shrink)
 
 
 def test_greedy_shrink_priority_order():

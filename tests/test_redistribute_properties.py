@@ -9,8 +9,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.redistribute import (balanced_expand, balanced_shrink,
-                                     greedy_expand, greedy_shrink)
+from repro.core.passes import (balanced_expand, balanced_shrink,
+                               greedy_expand, greedy_shrink)
 
 
 def job_arrays(draw, max_jobs=40, max_nodes=64):

@@ -19,7 +19,8 @@ import numpy as np
 from repro.core import CLUSTERS, get_strategy, simulate, traces
 from repro.core.scenario import ScenarioConfig
 from repro.experiments import ExperimentSpec, prepare_workload
-from repro.experiments.report import render_sweep_table  # noqa: F401 (re-export)
+from repro.experiments.report import (render_scenario_table,  # noqa: F401
+                                      render_sweep_table)
 
 
 def _spec(name: str, scale: float,
@@ -85,6 +86,31 @@ def fig_cleaning(name: str = "haswell", scale: float = 0.2) -> str:
                f"capacity {cap:,} "
                f"({'exceeds cap (artifact)' if u_raw.max() > cap else 'ok'})")
     return "\n".join(out)
+
+
+def fig_scenario_sensitivity(name: str, axis: str, values,
+                             scale: float = 0.2,
+                             scenario: ScenarioConfig | None = None,
+                             engine: str = "des",
+                             cache_dir: str | None = None,
+                             **spec_kw) -> str:
+    """Sensitivity analogue: one scenario axis swept over the full grid.
+
+    Runs the experiment layer once per axis value (sharing the cell store
+    when ``cache_dir`` is given) and renders the sensitivity table next to
+    the base value's Fig. 6-9 analogue, so the what-if and the paper grid
+    it perturbs read side by side.
+    """
+    from repro.experiments import sweep_scenario_axis
+
+    spec = ExperimentSpec(workloads=(name,), scale=scale, engine=engine,
+                          scenario=scenario or ScenarioConfig(), **spec_kw)
+    by_value = sweep_scenario_axis(spec, axis, values,
+                                   cache_dir=cache_dir, verbose=False)
+    table = render_scenario_table(
+        axis, {v: res[name] for v, res in by_value.items()})
+    base = render_sweep_table(by_value[float(values[0])][name])
+    return table + "\n\n" + base
 
 
 def main():

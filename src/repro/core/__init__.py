@@ -7,11 +7,13 @@
 # - traces:     statistical twins of Haswell/KNL/Eagle/Theta + cleaning
 # - metrics:    turnaround/makespan/wait/utilization with warm-up & drain-down
 from .cluster import CLUSTERS, Cluster, EAGLE, HASWELL, KNL, THETA
-from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
+from .jobs import (CLASS_NORMAL, CLASS_ON_DEMAND, CLASS_RIGID, DONE,
+                   PENDING, QUEUED, RUNNING, Workload)
 from .metrics import Window, aggregate_seeds, improvement, iqr, run_metrics
 from .passes import (balanced_expand, balanced_shrink, greedy_expand,
                      greedy_shrink)
-from .scenario import ScenarioConfig, apply_scenario
+from .scenario import (JobClasses, ScenarioConfig, apply_scenario,
+                       assign_job_classes)
 from .simulator import SimResult, Simulator, simulate
 from .speedup import (TabulatedSpeedup, TransformConfig, amdahl_efficiency,
                       amdahl_speedup, nodes_at_efficiency,
@@ -23,10 +25,11 @@ from . import traces
 
 __all__ = [
     "CLUSTERS", "Cluster", "EAGLE", "HASWELL", "KNL", "THETA",
+    "CLASS_NORMAL", "CLASS_ON_DEMAND", "CLASS_RIGID",
     "DONE", "PENDING", "QUEUED", "RUNNING", "Workload",
     "Window", "aggregate_seeds", "improvement", "iqr", "run_metrics",
     "balanced_expand", "balanced_shrink", "greedy_expand", "greedy_shrink",
-    "ScenarioConfig", "apply_scenario",
+    "JobClasses", "ScenarioConfig", "apply_scenario", "assign_job_classes",
     "SimResult", "Simulator", "simulate",
     "TabulatedSpeedup", "TransformConfig", "amdahl_efficiency",
     "amdahl_speedup", "nodes_at_efficiency",

@@ -19,6 +19,11 @@ QUEUED = 1    # submitted, waiting
 RUNNING = 2
 DONE = 3
 
+# Workload-class codes (scenario axis, see repro.core.scenario.JobClasses).
+CLASS_NORMAL = 0     # eligible for the rigid->malleable transform
+CLASS_RIGID = 1      # pinned rigid: never transformed, normal queue rank
+CLASS_ON_DEMAND = 2  # pinned rigid + queue priority (Fan & Lan on-demand)
+
 
 @dataclasses.dataclass
 class Workload:
@@ -39,6 +44,11 @@ class Workload:
         preferred allocation (speed/efficiency trade-off, Downey [5]).
         For rigid jobs all three equal ``nodes_req``.
       pfrac: per-job Amdahl parallel fraction used by the speedup model.
+      job_class: workload class (CLASS_NORMAL / CLASS_RIGID /
+        CLASS_ON_DEMAND).  Normal jobs are eligible for the
+        rigid->malleable transform; the other classes are pinned rigid and
+        on-demand jobs additionally take queue priority over every
+        non-on-demand waiting job (see ``repro.core.scenario.JobClasses``).
     """
 
     submit: np.ndarray
@@ -50,6 +60,7 @@ class Workload:
     max_nodes: np.ndarray
     pref_nodes: np.ndarray
     pfrac: np.ndarray
+    job_class: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
         n = len(self.submit)
@@ -62,6 +73,9 @@ class Workload:
         self.max_nodes = np.asarray(self.max_nodes, dtype=np.int64)
         self.pref_nodes = np.asarray(self.pref_nodes, dtype=np.int64)
         self.pfrac = np.asarray(self.pfrac, dtype=np.float64)
+        if self.job_class is None:
+            self.job_class = np.zeros(n, dtype=np.int8)
+        self.job_class = np.asarray(self.job_class, dtype=np.int8)
         for f in dataclasses.fields(self):
             arr = getattr(self, f.name)
             if len(arr) != n:
@@ -71,6 +85,16 @@ class Workload:
     @property
     def n_jobs(self) -> int:
         return len(self.submit)
+
+    @property
+    def on_demand(self) -> np.ndarray:
+        """Boolean mask of on-demand (queue-priority rigid) jobs."""
+        return self.job_class == CLASS_ON_DEMAND
+
+    @property
+    def transformable(self) -> np.ndarray:
+        """Boolean mask of jobs the malleable transform may convert."""
+        return self.job_class == CLASS_NORMAL
 
     def validate(self, cluster_nodes: Optional[int] = None) -> None:
         """Raise if the workload violates basic invariants."""
@@ -89,6 +113,11 @@ class Workload:
         for name in ("min_nodes", "max_nodes", "pref_nodes"):
             if np.any(getattr(w, name)[rigid] != w.nodes_req[rigid]):
                 raise ValueError(f"rigid jobs must have {name} == nodes_req")
+        if np.any((w.job_class < CLASS_NORMAL)
+                  | (w.job_class > CLASS_ON_DEMAND)):
+            raise ValueError("unknown job_class code")
+        if np.any(w.malleable & (w.job_class != CLASS_NORMAL)):
+            raise ValueError("class-pinned jobs must stay rigid")
         if cluster_nodes is not None:
             if np.any(w.min_nodes > cluster_nodes):
                 raise ValueError("job min_nodes exceeds cluster capacity")
@@ -142,6 +171,10 @@ class Workload:
                 "num_nodes": int(self.nodes_req[i]),
                 "type": "malleable" if self.malleable[i] else "rigid",
             }
+            if self.job_class[i] != CLASS_NORMAL:
+                d["job_class"] = ("on_demand"
+                                  if self.job_class[i] == CLASS_ON_DEMAND
+                                  else "rigid_pinned")
             if self.malleable[i]:
                 d.update(
                     num_nodes_min=int(self.min_nodes[i]),
@@ -162,6 +195,7 @@ class Workload:
             nodes_req=[j["num_nodes"] for j in jobs],
             walltime=[j.get("time_limit", 1.25 * j["runtime"]) for j in jobs],
         )
+        classes = {"on_demand": CLASS_ON_DEMAND, "rigid_pinned": CLASS_RIGID}
         for i, j in enumerate(jobs):
             if j.get("type") == "malleable":
                 w.malleable[i] = True
@@ -169,6 +203,8 @@ class Workload:
                 w.max_nodes[i] = j["num_nodes_max"]
                 w.pref_nodes[i] = j["num_nodes_pref"]
                 w.pfrac[i] = j.get("parallel_fraction", 0.9)
+            if j.get("job_class") in classes:
+                w.job_class[i] = classes[j["job_class"]]
         del n
         return w
 

@@ -278,6 +278,10 @@ class PassParams(NamedTuple):
     batched sweep).  ``wall_work`` is ``walltime * S(nodes_req)`` so the
     walltime-padded remaining-duration estimate at allocation ``a`` is
     ``remaining * wall_work / S(a)`` (the DES's ``_est_duration``).
+    ``on_demand`` marks queue-priority jobs (Fan & Lan hybrid workloads):
+    any queued on-demand job outranks every non-on-demand queued job,
+    regardless of submit order; it is only consulted when
+    :func:`schedule_tick` runs with ``with_classes=True``.
     """
 
     malleable: object   # bool — resizable under the lane's strategy
@@ -289,6 +293,7 @@ class PassParams(NamedTuple):
     prio_ref: object    # i32 greedy priority = alloc - prio_ref (Eqs. 1-2)
     pfrac: object       # f32 Amdahl parallel fraction
     wall_work: object   # f32 walltime * S(nodes_req)
+    on_demand: object = None  # bool — queue-priority class (optional)
 
 
 def _speedup_f32(n, p):
@@ -302,6 +307,36 @@ def first_true(mask):
     jnp = _jnp()
     head = jnp.argmax(mask, axis=-1)
     return mask & (jnp.arange(mask.shape[-1]) == head[..., None])
+
+
+def priority_head(queued, on_demand):
+    """Mask of the queue head under class priority.
+
+    The head is the first queued on-demand slot when any exists, else the
+    first queued slot — i.e. ``first_true`` over the (class, submit-rank)
+    queue order without materializing a sort.
+    """
+    jnp = _jnp()
+    q_od = queued & on_demand
+    return jnp.where(jnp.any(q_od, axis=-1)[..., None],
+                     first_true(q_od), first_true(queued & ~on_demand))
+
+
+def queue_ranks(queued, on_demand=None):
+    """1-based per-slot queue position (head == 1) in queue order.
+
+    Without classes the queue order is slot (FCFS) order; with classes
+    every queued on-demand slot ranks ahead of every non-on-demand one.
+    Non-queued slots get arbitrary ranks — callers mask with ``queued``.
+    """
+    jnp = _jnp()
+    if on_demand is None:
+        return jnp.cumsum(queued, axis=-1)
+    q_od = queued & on_demand
+    n_od = jnp.sum(q_od, axis=-1)
+    return jnp.where(on_demand, jnp.cumsum(q_od, axis=-1),
+                     n_od[..., None] + jnp.cumsum(queued & ~on_demand,
+                                                  axis=-1))
 
 
 def take_desc_prefix(prio, amount, need, lo0: int, hi0: int):
@@ -383,7 +418,8 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
                   capacity, t_now, *, balanced: bool, fill_rounds: int,
                   prio_lo: int, prio_hi: int, span_max: int,
                   shadow_iters: int = SHADOW_ITERS,
-                  expand_backend: str = "bisect"):
+                  expand_backend: str = "bisect",
+                  backfill_depth=None, with_classes: bool = False):
     """One Steps-1..3 scheduling pass on FCFS-ordered slot arrays.
 
     Pure and fixed-shape: works under jit/vmap/scan for lane shapes ``()``
@@ -397,7 +433,11 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
          backfill under a **shadow-time head reservation**
          (:func:`shadow_reservation`): a backfill candidate starts only if
          it finishes before the reservation or fits the spare-node pool —
-         the blocked head is never delayed by backfill.
+         the blocked head is never delayed by backfill.  The scan only
+         considers the first ``backfill_depth`` queued candidates behind
+         the head (per-lane data, a masked rank cutoff over the queue
+         snapshot at scan entry — the same bound the DES applies by
+         slicing its queue); ``None`` leaves the scan unbounded.
       2. Shrink running malleable jobs (greedy highest-priority-first, or
          AVG-balanced when ``balanced``) to admit the head.
       3. Expand running malleable jobs into remaining idle nodes (greedy
@@ -405,6 +445,14 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
          ``expand_backend='pallas'`` (or ``'pallas-interpret'`` off-TPU)
          the greedy give runs through the Pallas prefix-waterfill kernel
          in sorted priority order instead of the threshold bisection.
+
+    ``with_classes`` (static) enables workload-class queue priority:
+    ``p.on_demand`` slots outrank every non-on-demand queued slot, so the
+    Step-1 prefix starts all queued on-demand jobs first, the head (the
+    reservation owner Steps 2's shrink admits) is the first *on-demand*
+    queued job when one exists, and backfill ranks follow the same
+    (class, submit-rank) order.  The flag is static so class-free lanes
+    compile to exactly the class-free pass (zero overhead when off).
 
     Static ints ``prio_lo``/``prio_hi`` must bound ``alloc - prio_ref`` on
     every slot with shrink surplus / expand room (values outside are
@@ -421,18 +469,36 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
     jnp = _jnp()
     INF = jnp.float32(jnp.inf)
     level_iters = int(math.ceil(math.log2(span_max + 2))) + 1
+    od = p.on_demand if with_classes else None
 
     running = state == RUNNING
     free = capacity - jnp.sum(jnp.where(running, alloc, 0), axis=-1)
 
     # -- Step 1: FCFS prefix (slots are in FCFS order) --------------------
     queued = (state == QUEUED) & act
-    cumw = jnp.cumsum(jnp.where(queued, p.want, 0), axis=-1)
-    s1 = queued & (cumw <= free[..., None])
-    used = jnp.max(jnp.where(s1, cumw, 0), axis=-1)
-    leftover = free - used
-    # head fallback: first queued job not started, floor fits leftover
-    h_mask = first_true(queued & ~s1)
+    if with_classes:
+        # class-priority prefix: queued on-demand slots start first (in
+        # submit order); non-on-demand slots may only join the prefix when
+        # every queued on-demand job started.
+        q_od = queued & od
+        cumw_od = jnp.cumsum(jnp.where(q_od, p.want, 0), axis=-1)
+        s1o = q_od & (cumw_od <= free[..., None])
+        used_od = jnp.max(jnp.where(s1o, cumw_od, 0), axis=-1)
+        all_od = ~jnp.any(q_od & ~s1o, axis=-1)
+        rem = free - used_od
+        q_n = queued & ~od
+        cumw_n = jnp.cumsum(jnp.where(q_n, p.want, 0), axis=-1)
+        s1 = s1o | (q_n & (cumw_n <= rem[..., None]) & all_od[..., None])
+        leftover = rem - jnp.max(
+            jnp.where(s1 & ~od, cumw_n, 0), axis=-1)
+        h_mask = priority_head(queued & ~s1, od)
+    else:
+        cumw = jnp.cumsum(jnp.where(queued, p.want, 0), axis=-1)
+        s1 = queued & (cumw <= free[..., None])
+        used = jnp.max(jnp.where(s1, cumw, 0), axis=-1)
+        leftover = free - used
+        # head fallback: first queued job not started, floor fits leftover
+        h_mask = first_true(queued & ~s1)
     hfloor = jnp.sum(jnp.where(h_mask, p.floor, 0), axis=-1)
     hwant = jnp.sum(jnp.where(h_mask, p.want, 0), axis=-1)
     h_ok = (hfloor > 0) & (hfloor <= leftover)  # floor >= 1 on real jobs
@@ -447,13 +513,23 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
     free = leftover - jnp.where(h_ok, h_alloc, 0)
 
     # -- EASY backfill under the head's shadow-time reservation -----------
-    h_mask = first_true((state == QUEUED) & act)
+    queued = (state == QUEUED) & act
+    h_mask = priority_head(queued, od) if with_classes else \
+        first_true(queued)
     hfloor = jnp.sum(jnp.where(h_mask, p.floor, 0), axis=-1)
     hwant = jnp.sum(jnp.where(h_mask, p.want, 0), axis=-1)
     has_head = hfloor > 0
 
     def backfill(args):
         state, alloc, start_t, free = args
+        if backfill_depth is None:
+            depth_ok = True
+        else:
+            # rank cutoff over the queue snapshot at scan entry: the head
+            # holds rank 1, so candidates 1..depth behind it are ranks
+            # 2..depth+1 (the DES's ``queue[1 : 1 + depth]`` slice)
+            ranks = queue_ranks((state == QUEUED) & act, od)
+            depth_ok = ranks <= backfill_depth[..., None] + 1
         run = state == RUNNING
         est = jnp.where(
             run,
@@ -468,25 +544,40 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
         extra = jnp.where(blocked, ex_b,
                           jnp.where(has_head, free - hfloor, free))
 
+        def qcumsum(amount, mask):
+            # cumulative amounts in *queue order*: without classes this is
+            # slot (FCFS) order; with classes every on-demand candidate
+            # accumulates before any normal one, so cumulative-fit
+            # admission follows the same (class, submit-rank) order the
+            # DES scans (prefix semantics within that order)
+            if od is None:
+                return jnp.cumsum(jnp.where(mask, amount, 0), axis=-1)
+            a_od = jnp.where(mask & od, amount, 0)
+            a_n = jnp.where(mask & ~od, amount, 0)
+            return jnp.where(
+                od, jnp.cumsum(a_od, axis=-1),
+                jnp.sum(a_od, axis=-1, keepdims=True)
+                + jnp.cumsum(a_n, axis=-1))
+
         tfit = t_now[..., None] + p.wall_work / _speedup_f32(
             p.want, p.pfrac) <= shadow[..., None] + _SHADOW_EPS
         for _ in range(fill_rounds):
-            cand = (state == QUEUED) & act & ~h_mask
+            cand = (state == QUEUED) & act & ~h_mask & depth_ok
             # (a) finishes before the reservation: free nodes only
             c = cand & tfit & (p.want <= free[..., None])
-            cum = jnp.cumsum(jnp.where(c, p.want, 0), axis=-1)
+            cum = qcumsum(p.want, c)
             s = c & (cum <= free[..., None])
             free = free - jnp.max(jnp.where(s, cum, 0), axis=-1)
             # (b) runs past the reservation: spare-node pool, at want
             lim = jnp.minimum(free, extra)
             c2 = cand & ~s & ~tfit & (p.want <= lim[..., None])
-            cum2 = jnp.cumsum(jnp.where(c2, p.want, 0), axis=-1)
+            cum2 = qcumsum(p.want, c2)
             s2 = c2 & (cum2 <= lim[..., None])
             take2 = jnp.max(jnp.where(s2, cum2, 0), axis=-1)
             # (c) spare-node pool at floor (want did not fit)
             lim3 = jnp.minimum(free - take2, extra - take2)
             c3 = cand & ~s & ~s2 & ~tfit & (p.floor <= lim3[..., None])
-            cum3 = jnp.cumsum(jnp.where(c3, p.floor, 0), axis=-1)
+            cum3 = qcumsum(p.floor, c3)
             s3 = c3 & (cum3 <= lim3[..., None])
             take3 = jnp.max(jnp.where(s3, cum3, 0), axis=-1)
 

@@ -1,7 +1,7 @@
 """Scenario axes: what-if transformations of a rigid trace (beyond §2.3).
 
 The paper evaluates the malleability grid on the traces *as recorded*.
-The related work asks two follow-up questions the experiment layer makes
+The related work asks follow-up questions the experiment layer makes
 sweepable:
 
   * **Walltime accuracy** (Chadha et al., dynamic resource-aware batch
@@ -19,10 +19,18 @@ sweepable:
     durations scale by the same factor, and so does the shadow horizon) —
     the schedule is bit-identical (tested in ``tests/test_experiments.
     py``).  What changes schedules is estimate *heterogeneity*:
-    ``walltime_jitter = s`` multiplies each job's slack by a
-    deterministic per-job lognormal factor ``exp(s*g_j - s^2/2)``
-    (unit mean), so some estimates become tight and others padded —
-    the Chadha-style per-user accuracy spread.
+    ``walltime_jitter = s`` spreads each job's slack by a deterministic
+    per-job unit-mean factor drawn from ``walltime_dist`` with the
+    spec-seeded generator ``walltime_seed`` — the Chadha-style per-user
+    accuracy *distribution*, not just a global factor:
+
+      - ``lognormal``: slack *= exp(s*g_j - s^2/2) (unit mean; the
+        classic heavy-tailed over-estimation spread);
+      - ``uniform``: slack *= U[1-a, 1+a] with a = min(sqrt(3)*s, 1)
+        (unit mean, standard deviation ~ s, bounded support);
+      - ``exact_frac``: a fraction ``min(s, 1)`` of jobs get *exact*
+        estimates (slack 0) and the rest keep theirs — the bimodal
+        "some users request precisely" population.
 
   * **Arrival compression / burstiness** (Fan & Lan, hybrid workload
     scheduling): ``arrival_compression = c`` divides all submission times
@@ -30,11 +38,20 @@ sweepable:
     shapes — queue-pressure sensitivity at fixed work mix.
 
   * **Backfill depth**: how many queued candidates behind the blocked head
-    the EASY scan may consider.  Honoured by the DES; the batched engine
-    scans its whole active window (a documented fidelity difference, see
-    ``sweep/README.md``).
+    the EASY scan may consider.  Honoured bit-consistently by all three
+    engines since the policy core bounds the scan itself
+    (:func:`repro.core.passes.schedule_tick` masks candidates past the
+    depth'th queue rank; the DES slices its queue).
 
-Both workload transformations are pure and engine-agnostic: backends apply
+  * **Job classes** (Fan & Lan hybrid workloads): :class:`JobClasses`
+    partitions the trace into *rigid* (pinned rigid, normal queue rank),
+    *on-demand* (pinned rigid + queue priority over every non-on-demand
+    waiting job) and *malleable-eligible* jobs, with sweepable mix
+    fractions.  The cell's malleable ``proportion`` then applies on top:
+    only eligible jobs it selects are actually transformed, so the class
+    mix replaces the single global proportion as the only mix knob.
+
+All workload transformations are pure and engine-agnostic: backends apply
 :func:`apply_scenario` to the generated rigid trace *before* the
 rigid->malleable transform, so DES and JAX lanes see bit-identical inputs.
 """
@@ -44,9 +61,41 @@ import dataclasses
 
 import numpy as np
 
-from .jobs import Workload
+from .jobs import CLASS_NORMAL, CLASS_ON_DEMAND, CLASS_RIGID, Workload
 
 DEFAULT_BACKFILL_DEPTH = 256
+DEFAULT_WALLTIME_SEED = 0xE57
+
+WALLTIME_DISTS = ("lognormal", "uniform", "exact_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class JobClasses:
+    """Workload-class mix: fractions must partition the trace (sum to 1).
+
+    Every job lands in exactly one class (a seeded permutation assigns
+    ``round(rigid * n)`` jobs to the pinned-rigid class, the next
+    ``round(on_demand * n)`` to on-demand, the rest stay eligible for the
+    malleable transform) — property-tested in ``tests/test_experiments.py``.
+    """
+
+    rigid: float = 0.0      # pinned rigid, normal queue rank
+    on_demand: float = 0.0  # pinned rigid + queue priority
+    malleable: float = 1.0  # eligible for the rigid->malleable transform
+    seed: int = 0           # class-assignment permutation seed
+
+    def __post_init__(self) -> None:
+        for name in ("rigid", "on_demand", "malleable"):
+            if not 0.0 <= getattr(self, name) <= 1.0:
+                raise ValueError(f"job-class fraction {name} outside [0, 1]")
+        total = self.rigid + self.on_demand + self.malleable
+        if abs(total - 1.0) > 1e-9:
+            raise ValueError(
+                f"job-class fractions must sum to 1 (got {total})")
+
+    @property
+    def is_default(self) -> bool:
+        return self.rigid == 0.0 and self.on_demand == 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,19 +103,91 @@ class ScenarioConfig:
     """Declarative what-if axes applied on top of a generated trace."""
 
     walltime_factor: float = 1.0       # scales walltime slack (0 = exact)
-    walltime_jitter: float = 0.0       # per-job lognormal slack spread
+    walltime_jitter: float = 0.0       # per-job slack spread (see dist)
+    walltime_dist: str = "lognormal"   # named jitter distribution
+    walltime_seed: int = DEFAULT_WALLTIME_SEED  # spec-seeded jitter RNG
     arrival_compression: float = 1.0   # divides submit times (>1 = burstier)
     backfill_depth: int = DEFAULT_BACKFILL_DEPTH
+    job_classes: JobClasses = JobClasses()
 
     def __post_init__(self) -> None:
+        if isinstance(self.job_classes, dict):  # JSON round-trips
+            object.__setattr__(self, "job_classes",
+                               JobClasses(**self.job_classes))
         if self.walltime_factor < 0.0:
             raise ValueError("walltime_factor must be >= 0")
         if self.walltime_jitter < 0.0:
             raise ValueError("walltime_jitter must be >= 0")
+        if self.walltime_dist not in WALLTIME_DISTS:
+            raise ValueError(f"unknown walltime_dist "
+                             f"{self.walltime_dist!r}; choose from "
+                             f"{WALLTIME_DISTS}")
         if self.arrival_compression <= 0.0:
             raise ValueError("arrival_compression must be > 0")
         if self.backfill_depth < 1:
             raise ValueError("backfill_depth must be >= 1")
+
+    def canonical(self) -> "ScenarioConfig":
+        """Result-equivalent copy with no-effect knobs reset to defaults.
+
+        ``walltime_dist``/``walltime_seed`` only reach the RNG when the
+        jitter is non-zero (and the jitter itself only scales non-zero
+        slack), and the job-class seed only matters when some fraction is
+        non-default.  Fingerprints hash this canonical form so sweeping a
+        dead knob cannot spuriously invalidate stored cells.
+        """
+        out = self
+        if out.walltime_factor == 0.0 and out.walltime_jitter != 0.0:
+            out = dataclasses.replace(out, walltime_jitter=0.0)
+        if out.walltime_jitter == 0.0 and (
+                out.walltime_dist != "lognormal"
+                or out.walltime_seed != DEFAULT_WALLTIME_SEED):
+            out = dataclasses.replace(
+                out, walltime_dist="lognormal",
+                walltime_seed=DEFAULT_WALLTIME_SEED)
+        if out.job_classes.is_default and out.job_classes != JobClasses():
+            out = dataclasses.replace(out, job_classes=JobClasses())
+        return out
+
+
+def assign_job_classes(n_jobs: int, classes: JobClasses) -> np.ndarray:
+    """Deterministic per-job class codes partitioning ``n_jobs`` jobs.
+
+    A permutation drawn from ``classes.seed`` assigns the first
+    ``round(rigid * n)`` jobs to CLASS_RIGID, the next
+    ``round(on_demand * n)`` to CLASS_ON_DEMAND; everybody else stays
+    CLASS_NORMAL.  Every job lands in exactly one class.
+    """
+    out = np.full(n_jobs, CLASS_NORMAL, dtype=np.int8)
+    if classes.is_default:
+        return out
+    rng = np.random.default_rng(classes.seed)
+    perm = rng.permutation(n_jobs)
+    k_rigid = int(round(classes.rigid * n_jobs))
+    k_od = min(int(round(classes.on_demand * n_jobs)), n_jobs - k_rigid)
+    out[perm[:k_rigid]] = CLASS_RIGID
+    out[perm[k_rigid:k_rigid + k_od]] = CLASS_ON_DEMAND
+    return out
+
+
+def _jitter_multiplier(scenario: ScenarioConfig, n_jobs: int) -> np.ndarray:
+    """Per-job slack multiplier of the named distribution.
+
+    ``lognormal`` and ``uniform`` are unit-mean (the jitter spreads
+    estimates without moving the mean slack); ``exact_frac`` is a 0/1
+    mask with mean ``1 - min(s, 1)`` — it *removes* slack from the exact
+    fraction, so the mean shifts down by construction.
+    """
+    s = scenario.walltime_jitter
+    rng = np.random.default_rng(scenario.walltime_seed)
+    if scenario.walltime_dist == "lognormal":
+        g = rng.standard_normal(n_jobs)
+        return np.exp(s * g - 0.5 * s * s)
+    if scenario.walltime_dist == "uniform":
+        a = min(np.sqrt(3.0) * s, 1.0)
+        return rng.uniform(1.0 - a, 1.0 + a, n_jobs)
+    # exact_frac: fraction min(s, 1) of jobs get exact estimates
+    return (rng.random(n_jobs) >= min(s, 1.0)).astype(np.float64)
 
 
 def apply_scenario(workload: Workload,
@@ -75,11 +196,13 @@ def apply_scenario(workload: Workload,
 
     Order-preserving: submission times are divided by a positive constant
     and walltimes stay >= runtime, so the result is a valid workload with
-    the same FCFS order.
+    the same FCFS order.  Job classes only pin/prioritize jobs; shapes are
+    untouched.
     """
     if (scenario.walltime_factor == 1.0
             and scenario.walltime_jitter == 0.0
-            and scenario.arrival_compression == 1.0):
+            and scenario.arrival_compression == 1.0
+            and scenario.job_classes.is_default):
         return workload
     w = workload.copy()
     if scenario.arrival_compression != 1.0:
@@ -89,10 +212,10 @@ def apply_scenario(workload: Workload,
         slack = np.maximum(w.walltime / w.runtime - 1.0, 0.0)
         slack = slack * scenario.walltime_factor
         if scenario.walltime_jitter != 0.0:
-            s = scenario.walltime_jitter
-            # fixed generator seed: the jitter is part of the scenario's
-            # identity, bit-identical for both backends and every run
-            g = np.random.default_rng(0xE57).standard_normal(w.n_jobs)
-            slack = slack * np.exp(s * g - 0.5 * s * s)  # unit-mean
+            # spec-seeded generator: the jitter draw is part of the
+            # scenario's identity, bit-identical for both backends
+            slack = slack * _jitter_multiplier(scenario, w.n_jobs)
         w.walltime = w.runtime * (1.0 + slack)
+    if not scenario.job_classes.is_default:
+        w.job_class = assign_job_classes(w.n_jobs, scenario.job_classes)
     return w

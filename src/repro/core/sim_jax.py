@@ -36,6 +36,7 @@ import numpy as np
 from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
 from .passes import (PassParams, _speedup_f32 as _speedup, schedule_tick,
                      start_policies)
+from .scenario import DEFAULT_BACKFILL_DEPTH
 from .strategies import Strategy
 
 
@@ -52,6 +53,7 @@ class JobArrays(NamedTuple):
     pref_nodes: jax.Array  # i32 (n,)
     pfrac: jax.Array       # f32 (n,)
     rank: jax.Array        # i32 (n,) FCFS order (argsort of submit)
+    on_demand: jax.Array   # bool (n,) queue-priority class
 
     @staticmethod
     def from_workload(w: Workload) -> "JobArrays":
@@ -69,6 +71,7 @@ class JobArrays(NamedTuple):
             pref_nodes=jnp.asarray(w.pref_nodes, jnp.int32),
             pfrac=jnp.asarray(w.pfrac, jnp.float32),
             rank=jnp.asarray(rank, jnp.int32),
+            on_demand=jnp.asarray(w.on_demand, jnp.bool_),
         )
 
     @staticmethod
@@ -94,7 +97,8 @@ class SimTrace(NamedTuple):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("strategy", "capacity", "tick", "n_ticks"),
+    static_argnames=("strategy", "capacity", "tick", "n_ticks",
+                     "with_classes"),
 )
 def simulate_scan(
     jobs: JobArrays,
@@ -102,6 +106,8 @@ def simulate_scan(
     capacity: int,
     tick: float,
     n_ticks: int,
+    backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
+    with_classes: bool = False,
 ) -> Tuple[SimState, SimTrace]:
     """Run ``n_ticks`` scheduler ticks; returns final state + per-tick trace."""
     n = jobs.submit.shape[0]
@@ -118,7 +124,9 @@ def simulate_scan(
         min_nodes=sj.min_nodes, max_nodes=sj.max_nodes,
         want=want, floor=floor, shrink_floor=sfloor, prio_ref=prio_ref,
         pfrac=sj.pfrac, wall_work=sj.walltime * s_ref,
+        on_demand=sj.on_demand,
     )
+    depth = jnp.asarray(backfill_depth, jnp.int32)
     # conservative static pass bounds: every allocation and priority
     # reference lies within a few multiples of the cluster size
     prio_lo, prio_hi = -4 * int(capacity), 4 * int(capacity)
@@ -159,7 +167,8 @@ def simulate_scan(
             jnp.int32(capacity), t,
             balanced=bool(strategy.malleable and strategy.balanced),
             fill_rounds=2, prio_lo=prio_lo, prio_hi=prio_hi,
-            span_max=span_max)
+            span_max=span_max, backfill_depth=depth,
+            with_classes=with_classes)
 
         # 5. net per-tick op accounting (jobs running before & after)
         still = running0 & (state == RUNNING)
@@ -179,30 +188,43 @@ def simulate_scan(
 
 
 def simulate_jax(workload: Workload, capacity: int, tick: float,
-                 n_ticks: int, strategy: Strategy) -> Tuple[SimState, SimTrace]:
+                 n_ticks: int, strategy: Strategy,
+                 backfill_depth: int = DEFAULT_BACKFILL_DEPTH
+                 ) -> Tuple[SimState, SimTrace]:
     """Convenience wrapper: Workload -> device arrays -> scan."""
     return simulate_scan(JobArrays.from_workload(workload), strategy,
-                         int(capacity), float(tick), int(n_ticks))
+                         int(capacity), float(tick), int(n_ticks),
+                         backfill_depth,
+                         with_classes=bool(np.any(workload.on_demand)))
 
 
 @functools.lru_cache(maxsize=None)
 def _batched_sim(strategy: Strategy, capacity: int, tick: float,
-                 n_ticks: int):
+                 n_ticks: int, with_classes: bool):
     """One jitted vmap of :func:`simulate_scan` per static configuration."""
     return jax.jit(jax.vmap(
-        lambda jobs: simulate_scan(jobs, strategy, capacity, tick, n_ticks)))
+        lambda jobs, depth: simulate_scan(jobs, strategy, capacity, tick,
+                                          n_ticks, depth,
+                                          with_classes=with_classes)))
 
 
 def simulate_scan_batch(jobs: JobArrays, strategy: Strategy, capacity: int,
-                        tick: float, n_ticks: int
-                        ) -> Tuple[SimState, SimTrace]:
+                        tick: float, n_ticks: int,
+                        backfill_depth=None) -> Tuple[SimState, SimTrace]:
     """Batched entry point: ``jobs`` fields are (B, n); one lane per variant.
 
     The strategy axis stays static (one jit per strategy); proportion/seed
-    variants ride the leading batch axis.  For the high-throughput
-    event-stepped engine use :mod:`repro.sweep.batch` instead — this wrapper
-    runs the dense per-tick scan and is intended for moderate grids and
-    property tests.
+    variants ride the leading batch axis.  ``backfill_depth`` may be a
+    scalar or a (B,) array (per-lane depths share the compilation).  For
+    the high-throughput event-stepped engine use :mod:`repro.sweep.batch`
+    instead — this wrapper runs the dense per-tick scan and is intended
+    for moderate grids and property tests.
     """
+    B = jobs.submit.shape[0]
+    if backfill_depth is None:
+        backfill_depth = DEFAULT_BACKFILL_DEPTH
+    depth = jnp.broadcast_to(
+        jnp.asarray(backfill_depth, jnp.int32), (B,))
+    with_classes = bool(jnp.any(jobs.on_demand))
     return _batched_sim(strategy, int(capacity), float(tick),
-                        int(n_ticks))(jobs)
+                        int(n_ticks), with_classes)(jobs, depth)

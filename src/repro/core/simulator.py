@@ -35,6 +35,7 @@ from .passes import (balanced_expand, balanced_shrink,
                      easy_backfill_scan_exact, easy_reservation_exact,
                      fcfs_prefix_exact, greedy_expand, greedy_shrink,
                      start_policies)
+from .scenario import DEFAULT_BACKFILL_DEPTH
 from .speedup import amdahl_speedup
 from .strategies import Strategy
 
@@ -100,7 +101,7 @@ class Simulator:
         workload: Workload,
         cluster: Cluster,
         strategy: Strategy,
-        backfill_depth: int = 256,
+        backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
         dense_ticks: bool = False,
     ):
         workload.validate(cluster.nodes)
@@ -145,6 +146,20 @@ class Simulator:
         order = np.argsort(w.submit, kind="stable")
         aptr = 0
         queue: deque = deque()
+        od = w.on_demand
+        has_od = bool(np.any(od))
+
+        def enqueue(j: int) -> None:
+            # On-demand jobs take queue priority (Fan & Lan): an arriving
+            # on-demand job is inserted behind the queued on-demand jobs
+            # but ahead of every normal one, so the queue stays in
+            # (class, submit) order and the FCFS machinery below —
+            # prefix, head reservation, backfill slice — needs no change.
+            if has_od and od[j]:
+                queue.insert(sum(1 for q in queue if od[q]), j)
+            else:
+                queue.append(j)
+
         running = _RunningSet(n)
         busy = 0
         t = 0.0
@@ -352,7 +367,7 @@ class Simulator:
             while aptr < n and submit_sorted[aptr] <= t + _EPS:
                 j = int(order[aptr])
                 state[j] = QUEUED
-                queue.append(j)
+                enqueue(j)
                 aptr += 1
             schedule()
 

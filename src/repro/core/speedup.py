@@ -124,7 +124,11 @@ def transform_rigid_to_malleable(
 
     Matches the paper's methodology (§2.3): the *same* workload is reused
     across proportions; a pseudo-random seed selects which jobs become
-    malleable, and results are averaged over seeds.
+    malleable, and results are averaged over seeds.  Jobs pinned rigid by
+    a workload-class assignment (``job_class != CLASS_NORMAL``, see
+    :mod:`repro.core.scenario`) are never converted: the selection still
+    consumes the same permutation prefix, so the malleable subset nests
+    across proportions and stays bit-identical to the batched transform.
     """
     if not 0.0 <= proportion <= 1.0:
         raise ValueError(f"proportion must be in [0,1], got {proportion}")
@@ -133,6 +137,7 @@ def transform_rigid_to_malleable(
     perm, e_ref = _seed_draws(w, seed, config)
     k = int(round(proportion * n))
     chosen = perm[:k]
+    chosen = chosen[workload.transformable[chosen]]
 
     p, mn, pref, mx = _malleable_ranges(w.nodes_req, e_ref, cluster_nodes,
                                         config)
@@ -187,6 +192,7 @@ def batched_malleable_params(
     for b, (prop, seed) in enumerate(cells):
         perm, (p, mn, pref, mx) = by_seed[seed]
         chosen = perm[: int(round(prop * n))]
+        chosen = chosen[workload.transformable[chosen]]
         out["malleable"][b, chosen] = True
         out["pfrac"][b, chosen] = p[chosen]
         out["min_nodes"][b, chosen] = mn[chosen]

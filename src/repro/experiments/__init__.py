@@ -9,13 +9,18 @@
 # - crosscheck:  seeded DES crosscheck + tolerances (CI fidelity gate)
 # - report:      renderers over the shared artifact schema
 # - cli:         shared argparse wiring for every grid CLI
-from .report import best_improvements, render_sweep_table
-from .run import (load_artifact_results, run_experiment, write_artifact)
+from .report import (SCENARIO_AXES, best_improvements,
+                     render_scenario_table, render_sweep_table,
+                     scenario_variant)
+from .run import (load_artifact_results, run_experiment,
+                  sweep_scenario_axis, write_artifact)
 from .spec import ENGINES, ExperimentSpec, prepare_workload
-from repro.core.scenario import ScenarioConfig
+from repro.core.scenario import JobClasses, ScenarioConfig
 
 __all__ = [
-    "ENGINES", "ExperimentSpec", "ScenarioConfig", "prepare_workload",
-    "run_experiment", "write_artifact", "load_artifact_results",
-    "best_improvements", "render_sweep_table",
+    "ENGINES", "ExperimentSpec", "JobClasses", "ScenarioConfig",
+    "SCENARIO_AXES", "prepare_workload",
+    "run_experiment", "sweep_scenario_axis", "write_artifact",
+    "load_artifact_results", "best_improvements", "render_sweep_table",
+    "render_scenario_table", "scenario_variant",
 ]

@@ -10,12 +10,12 @@ four supercomputer grids.  Per-cell metrics come back through
 :mod:`repro.sweep.metrics_jax`; only lanes that ran to completion are
 written to the cell store.
 
-Scenario axes: walltime accuracy and arrival compression are applied to
-the trace before lane construction (bit-identical to the DES backend's
-input).  ``backfill_depth`` is *not* honoured here — the batched engine's
-EASY scan is bounded by its active-set window, a documented fidelity
-difference — so a non-default depth only changes the cell keys, not the
-simulation; a warning is emitted.
+Scenario axes: walltime accuracy/distribution, arrival compression and
+job classes are applied to the trace before lane construction
+(bit-identical to the DES backend's input); ``backfill_depth`` is lane
+data that bounds the engine's EASY scan itself
+(:mod:`repro.core.passes`), so every scenario axis is engine-faithful —
+the spec's depth both keys the cell store *and* changes the schedule.
 
 Backend options (results-neutral tuning, not part of the spec):
 ``window`` (active-set slots, 0 = auto), ``chunk`` (scan steps between
@@ -26,13 +26,11 @@ from __future__ import annotations
 
 import pathlib
 import time
-import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import DONE, get_strategy
-from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
 from repro.sweep.batch import (EngineConfig, build_lanes, concat_lanes,
                                simulate_lanes)
 from repro.sweep.cache import SweepCache
@@ -60,13 +58,6 @@ def run_cells(spec: ExperimentSpec,
               verbose: bool = True) -> Tuple[Dict, Dict]:
     """Run ``todo`` cells on the batched engine; one batch per structure."""
     opts = options or {}
-    if spec.scenario.backfill_depth != DEFAULT_BACKFILL_DEPTH:
-        warnings.warn(
-            "the batched jax engine scans its whole active-set window; "
-            f"backfill_depth={spec.scenario.backfill_depth} keys the cell "
-            "store but does not bound the scan (see sweep/README.md)",
-            stacklevel=2)
-
     names = [n for n in spec.workloads if any(n == m for m, _ in todo)]
     wls = {name: prepare_workload(spec, name) for name in names}
 
@@ -87,8 +78,10 @@ def run_cells(spec: ExperimentSpec,
             if not lanes:
                 continue
             cl, w_rigid, window = wls[name]
-            batch, _order = build_lanes(w_rigid, cl.nodes, lanes,
-                                        config=spec.transform, tick=cl.tick)
+            batch, _order = build_lanes(
+                w_rigid, cl.nodes, lanes, config=spec.transform,
+                tick=cl.tick,
+                backfill_depth=spec.scenario.backfill_depth)
             batches.append(batch)
             t0s += [window.t0] * len(lanes)
             t1s += [window.t1] * len(lanes)
@@ -97,6 +90,8 @@ def run_cells(spec: ExperimentSpec,
         cfg = EngineConfig(balanced=balanced,
                            window=int(opts.get("window", 0)),
                            chunk=int(opts.get("chunk", 160)),
+                           max_steps_factor=int(
+                               opts.get("max_steps_factor", 16)),
                            expand_backend=opts.get("expand_backend",
                                                    "bisect"))
         res = simulate_lanes(big, cfg, verbose=verbose)
@@ -122,5 +117,8 @@ def run_cells(spec: ExperimentSpec,
             print(f"[experiment-jax:{'+'.join(names)}] WARNING: {tag} batch "
                   "hit the step budget with unfinished lanes")
     info["sim_seconds"] = time.monotonic() - t0
-    info["computed_cells"] = len(todo)
+    # lanes cut off by the step budget are *attempted*, not computed:
+    # counting them as computed would make --expect-cached resume
+    # summaries overstate coverage (they were never written to the store)
+    info["computed_cells"] = len(todo) - len(info["incomplete"])
     return metrics, info

@@ -10,7 +10,9 @@ from __future__ import annotations
 import argparse
 
 from repro.core import CLUSTERS
-from repro.core.scenario import DEFAULT_BACKFILL_DEPTH, ScenarioConfig
+from repro.core.scenario import (DEFAULT_BACKFILL_DEPTH,
+                                 DEFAULT_WALLTIME_SEED, WALLTIME_DISTS,
+                                 JobClasses, ScenarioConfig)
 from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
                                    SWEEP_PROPORTIONS)
 
@@ -61,23 +63,47 @@ def add_scenario_arguments(ap: argparse.ArgumentParser) -> None:
                     help="scales walltime slack: 0 = exact estimates, "
                          "1 = the trace's padding, 4 = 4x padding")
     ap.add_argument("--walltime-jitter", type=float, default=0.0,
-                    help="per-job lognormal spread of walltime slack "
-                         "(heterogeneous estimate accuracy; 0 = uniform)")
+                    help="per-job spread of walltime slack (heterogeneous "
+                         "estimate accuracy; 0 = uniform; distribution "
+                         "set by --walltime-dist)")
+    ap.add_argument("--walltime-dist", choices=list(WALLTIME_DISTS),
+                    default="lognormal",
+                    help="named per-job walltime-accuracy distribution "
+                         "the jitter draws from")
+    ap.add_argument("--walltime-seed", type=int,
+                    default=DEFAULT_WALLTIME_SEED,
+                    help="spec-seeded RNG for the jitter draw (part of "
+                         "the scenario's identity)")
     ap.add_argument("--arrival-compression", type=float, default=1.0,
                     help="divides submission times: 2.0 doubles the "
                          "arrival rate at a fixed work mix")
     ap.add_argument("--backfill-depth", type=int,
                     default=DEFAULT_BACKFILL_DEPTH,
-                    help="EASY backfill scan depth (DES; the jax engine "
-                         "scans its whole active window)")
+                    help="EASY backfill scan depth, honoured by every "
+                         "engine (the policy core bounds the scan itself)")
+    ap.add_argument("--rigid-frac", type=float, default=0.0,
+                    help="job-class mix: fraction pinned rigid (never "
+                         "transformed, normal queue rank)")
+    ap.add_argument("--on-demand-frac", type=float, default=0.0,
+                    help="job-class mix: fraction on-demand (pinned rigid "
+                         "+ queue priority, Fan & Lan)")
+    ap.add_argument("--class-seed", type=int, default=0,
+                    help="job-class assignment permutation seed")
 
 
 def scenario_from_args(args: argparse.Namespace) -> ScenarioConfig:
     return ScenarioConfig(
         walltime_factor=args.walltime_factor,
         walltime_jitter=args.walltime_jitter,
+        walltime_dist=args.walltime_dist,
+        walltime_seed=args.walltime_seed,
         arrival_compression=args.arrival_compression,
         backfill_depth=args.backfill_depth,
+        job_classes=JobClasses(
+            rigid=args.rigid_frac,
+            on_demand=args.on_demand_frac,
+            malleable=1.0 - args.rigid_frac - args.on_demand_frac,
+            seed=args.class_seed),
     )
 
 

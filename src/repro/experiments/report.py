@@ -4,15 +4,96 @@ Consumers of experiment results — ``benchmarks/figures.py``,
 ``benchmarks/run.py``, ``examples/paper_repro.py`` — render from the
 aggregate schema :func:`repro.experiments.run_experiment` produces:
 ``{"rigid": metrics, "<strategy>@<pct>": aggregated, "_meta": {...}}``.
+
+The scenario-sensitivity reporter (``--compare-scenarios``) also lives
+here: :data:`SCENARIO_AXES` names every sweepable scenario axis,
+:func:`scenario_variant` derives the per-value :class:`ScenarioConfig`,
+and :func:`render_scenario_table` renders the sensitivity table alongside
+the Figs. 6-9 analogues.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Sequence
 
 import numpy as np
 
 from repro.core import improvement
+from repro.core.scenario import JobClasses, ScenarioConfig
 from repro.core.strategies import MALLEABLE_STRATEGY_NAMES
+
+# Sweepable scenario axes for --compare-scenarios: axis name -> how a
+# swept value lands in the ScenarioConfig.  Plain fields replace
+# themselves; the job-class mix axes rewrite the JobClasses partition
+# (the malleable-eligible fraction absorbs the remainder).
+SCENARIO_AXES = ("walltime_factor", "walltime_jitter",
+                 "arrival_compression", "backfill_depth",
+                 "on_demand_frac", "rigid_frac")
+
+
+def scenario_variant(base: ScenarioConfig, axis: str,
+                     value: float) -> ScenarioConfig:
+    """``base`` with the swept ``axis`` set to ``value``."""
+    if axis not in SCENARIO_AXES:
+        raise ValueError(f"unknown scenario axis {axis!r}; "
+                         f"choose from {SCENARIO_AXES}")
+    if axis == "backfill_depth":
+        return dataclasses.replace(base, backfill_depth=int(value))
+    if axis in ("on_demand_frac", "rigid_frac"):
+        jc = base.job_classes
+        rigid = jc.rigid if axis == "on_demand_frac" else float(value)
+        on_demand = float(value) if axis == "on_demand_frac" \
+            else jc.on_demand
+        return dataclasses.replace(base, job_classes=JobClasses(
+            rigid=rigid, on_demand=on_demand,
+            malleable=1.0 - rigid - on_demand, seed=jc.seed))
+    return dataclasses.replace(base, **{axis: float(value)})
+
+
+def render_scenario_table(axis: str, results_by_value: Dict[float, Dict],
+                          metrics: Sequence[str] = (
+                              "turnaround_mean", "wait_mean",
+                              "utilization")) -> str:
+    """Sensitivity table: strategies x swept scenario-axis values.
+
+    ``results_by_value`` maps each swept value to one workload's results
+    in the shared artifact schema (all from the same base spec).  Each
+    metric block shows the rigid baseline and every strategy at the
+    spec's highest malleable proportion, one column per axis value.
+    """
+    values = sorted(results_by_value)
+    first = results_by_value[values[0]]
+    meta = first["_meta"]
+    pct = max(int(p * 100) for p in meta["proportions"])
+    labels = [f"{axis}={v:g}" for v in values]
+    width = max(16, max(len(lb) for lb in labels) + 2)
+    out = [f"== Scenario sensitivity: {meta['workload']} x {axis} "
+           f"(scale {meta['scale']}, {meta['seeds']} seeds, "
+           f"strategies at {pct}% malleable) =="]
+    for metric in metrics:
+        out.append(f"  {metric}:")
+        out.append("    strategy  " + "".join(
+            lb.rjust(width) for lb in labels))
+        rows = [("rigid", metric, "")] + [
+            (s, f"{metric}_mean", f"{s}@{pct}")
+            for s in _strategies_of(first)]
+        table = []
+        for label, key, cell in rows:
+            vals = []
+            for v in values:
+                r = results_by_value[v]
+                src = r["rigid"] if label == "rigid" else r.get(cell, {})
+                vals.append(src.get(key, float("nan")))
+            table.append((label, vals))
+        finite = [v for _, vals in table for v in vals if np.isfinite(v)]
+        # fraction-valued metrics (e.g. utilization) need the decimals a
+        # cross-value comparison lives on; big second-valued ones don't
+        dec = 3 if finite and max(abs(v) for v in finite) < 10 else 1
+        for label, vals in table:
+            out.append(f"    {label:<9}" + "".join(
+                f"{v:>{width},.{dec}f}" if np.isfinite(v)
+                else f"{'-':>{width}}" for v in vals))
+    return "\n".join(out)
 
 
 def _strategies_of(results: Dict) -> Sequence[str]:

@@ -100,6 +100,10 @@ def run_experiment(spec: ExperimentSpec, *,
     # cells whose lane never ran to completion (step-budget cutoff): their
     # metrics are partial and must poison downstream whole-file reuse
     incomplete = set(engine_info.pop("incomplete", []))
+    # whole-run split: computed (complete, stored) vs. incomplete
+    # (attempted, not stored) — computed_cells alone must never imply
+    # full coverage of the todo list
+    engine_info["incomplete_cells_total"] = len(incomplete)
 
     # -- assemble the shared artifact schema per workload -----------------
     out: Dict[str, Dict] = {}
@@ -151,6 +155,28 @@ def run_experiment(spec: ExperimentSpec, *,
                 spec, name, complete, n_cells=crosscheck,
                 rng_seed=crosscheck_seed, store=store, verbose=verbose)
         out[name] = results
+    return out
+
+
+def sweep_scenario_axis(spec: ExperimentSpec, axis: str,
+                        values, **run_kwargs) -> Dict[float, Dict]:
+    """Run ``spec`` once per swept scenario-axis value.
+
+    Returns ``{value: {workload: results}}``.  Every variant differs from
+    ``spec`` only in the swept axis, so with a ``cache_dir`` the variants
+    share every cell the axis does not invalidate (and re-runs of the
+    whole sweep are pure store hits).  Rendering lives in
+    :func:`repro.experiments.report.render_scenario_table`.
+    """
+    import dataclasses
+
+    from .report import scenario_variant
+
+    out: Dict[float, Dict] = {}
+    for value in values:
+        variant = dataclasses.replace(
+            spec, scenario=scenario_variant(spec.scenario, axis, value))
+        out[float(value)] = run_experiment(variant, **run_kwargs)
     return out
 
 

@@ -131,7 +131,9 @@ class ExperimentSpec:
             "engine": self.engine,
             "engine_version": engine_version(self.engine),
             "transform": dataclasses.asdict(self.transform),
-            "scenario": dataclasses.asdict(self.scenario),
+            # canonical form: no-effect knobs (jitter seed at zero jitter,
+            # class seed at default fractions) don't invalidate artifacts
+            "scenario": dataclasses.asdict(self.scenario.canonical()),
         }
 
     def key(self) -> str:

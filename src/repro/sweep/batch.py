@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core.jobs import DONE, PENDING, QUEUED, RUNNING, Workload
 from repro.core.passes import PassParams, schedule_tick, start_policies
+from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
 from repro.core.speedup import (TransformConfig, amdahl_speedup,
                                 batched_malleable_params)
 from repro.core.strategies import Strategy
@@ -65,7 +66,10 @@ from repro.core.strategies import Strategy
 # Bump when engine semantics change: invalidates sweep-cache entries.
 # v2: shadow-time EASY backfill (head reservation) via the shared policy
 # core; per-lane capacity/tick; multi-trace padded batching.
-ENGINE_VERSION = 2
+# v3: the EASY scan is bounded by backfill_depth (per-lane data, same
+# rank cutoff as the DES queue slice) instead of scanning the whole
+# active window; workload-class queue priority (on-demand lanes).
+ENGINE_VERSION = 3
 
 _TICK_EPS = 1e-6   # ceil guard, matches the DES event quantization
 _REM_EPS = 1e-5    # remaining-work completion threshold (fraction of job)
@@ -95,8 +99,10 @@ class BatchedLanes(NamedTuple):
     floor: jax.Array         # i32 (B, n) smallest start allocation
     shrink_floor: jax.Array  # i32 (B, n) smallest Step-2 allocation
     prio_ref: jax.Array      # i32 (B, n): greedy priority = alloc - prio_ref
+    on_demand: jax.Array     # bool (B, n) queue-priority class
     capacity: jax.Array      # i32 (B,) cluster nodes of the lane
     tick: jax.Array          # f32 (B,) scheduling granularity of the lane
+    backfill_depth: jax.Array  # i32 (B,) EASY scan bound of the lane
 
     @property
     def n_lanes(self) -> int:
@@ -124,6 +130,7 @@ def build_lanes(
     lanes: Sequence[Tuple[Strategy, float, int]],
     config: TransformConfig = TransformConfig(),
     tick: float = 1.0,
+    backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
 ) -> Tuple[BatchedLanes, np.ndarray]:
     """Stack (strategy, proportion, seed) lanes into device arrays.
 
@@ -169,8 +176,10 @@ def build_lanes(
         floor=jnp.asarray(floor, jnp.int32),
         shrink_floor=jnp.asarray(sfloor, jnp.int32),
         prio_ref=jnp.asarray(prio_ref, jnp.int32),
+        on_demand=jnp.asarray(np.tile(w.on_demand, (B, 1))),
         capacity=jnp.full((B,), int(cluster_nodes), jnp.int32),
         tick=jnp.full((B,), float(tick), jnp.float32),
+        backfill_depth=jnp.full((B,), int(backfill_depth), jnp.int32),
     )
     return batch, order
 
@@ -188,11 +197,11 @@ def concat_lanes(batches: Sequence[BatchedLanes]) -> BatchedLanes:
         "submit": jnp.float32(jnp.inf), "malleable": False, "min_nodes": 1, "max_nodes": 1,
         "pfrac": jnp.float32(0.0), "inv_ref": jnp.float32(1.0),
         "wall_work": jnp.float32(1.0), "want": 1, "floor": 1,
-        "shrink_floor": 1, "prio_ref": 0,
+        "shrink_floor": 1, "prio_ref": 0, "on_demand": False,
     }
 
     def pad(name, arr, n):
-        if name in ("capacity", "tick") or n == n_max:
+        if name in ("capacity", "tick", "backfill_depth") or n == n_max:
             return arr
         return jnp.pad(arr, ((0, 0), (0, n_max - n)),
                        constant_values=pad_fill[name])
@@ -237,12 +246,19 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     prio_lo = -int(np.max(np.asarray(batch.prio_ref)))
     prio_hi = int(np.max(np.asarray(batch.max_nodes - batch.prio_ref)))
     span_max = int(np.max(np.asarray(batch.max_nodes - batch.min_nodes)))
+    # static: class-free batches compile the class-free pass (no overhead)
+    with_classes = bool(np.any(np.asarray(batch.on_demand)))
+    # queue ranks never exceed the window's queued count, so a depth >= W
+    # cannot cut the scan: such compilations skip the rank mask entirely
+    # (the default-depth grid pays nothing for the axis)
+    min_depth = int(np.min(np.asarray(batch.backfill_depth)))
     W_min = int(min(cfg.window or 128, n))
     W = W_min
 
     def fn_for(w):
         # module-level cache: one trace/compile per static configuration
-        return _chunk_fn(cfg, n, B, w, prio_lo, prio_hi, span_max)
+        return _chunk_fn(cfg, n, B, w, prio_lo, prio_hi, span_max,
+                         with_classes, depth_bounded=min_depth < w)
 
     real = jnp.isfinite(batch.submit)  # padding slots are born DONE
     full = dict(
@@ -304,18 +320,22 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
 
 @functools.lru_cache(maxsize=64)
 def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
-              prio_lo: int, prio_hi: int, span_max: int):
+              prio_lo: int, prio_hi: int, span_max: int,
+              with_classes: bool = False, depth_bounded: bool = True):
     """Compile the compaction + K-step scan + scatter-back chunk kernel.
 
-    ``capacity`` and ``tick`` are lane data (fields of the batch), not part
-    of the compile key — one compilation serves every cluster at a given
-    shape, which is what makes the multi-trace batch a single compile.
+    ``capacity``, ``tick`` and ``backfill_depth`` are lane data (fields of
+    the batch), not part of the compile key — one compilation serves every
+    cluster (and every depth-swept lane) at a given shape, which is what
+    makes the multi-trace batch a single compile.  ``with_classes`` is the
+    one workload-derived static: it gates the on-demand queue-priority
+    passes so class-free batches pay nothing for the axis.
     """
     K = cfg.chunk
     rows = jnp.arange(B)[:, None]
     INF = jnp.float32(jnp.inf)
 
-    def step(bj, capacity, tick, arrival_limit, carry, _):
+    def step(bj, capacity, tick, depth, arrival_limit, carry, _):
         (bstate, balloc, brem, bstart, bend, beops, bsops,
          k, retrig, frozen) = carry
         t = k.astype(jnp.float32) * tick
@@ -362,12 +382,15 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             malleable=bj.malleable, min_nodes=bj.min_nodes,
             max_nodes=bj.max_nodes, want=bj.want, floor=bj.floor,
             shrink_floor=bj.shrink_floor, prio_ref=bj.prio_ref,
-            pfrac=bj.pfrac, wall_work=bj.wall_work)
+            pfrac=bj.pfrac, wall_work=bj.wall_work,
+            on_demand=bj.on_demand)
         bstate, balloc, bstart = schedule_tick(
             params, bstate, balloc, brem, bstart, act[:, None],
             capacity, t_next, balanced=cfg.balanced,
             fill_rounds=cfg.fill_rounds, prio_lo=prio_lo, prio_hi=prio_hi,
-            span_max=span_max, expand_backend=cfg.expand_backend)
+            span_max=span_max, expand_backend=cfg.expand_backend,
+            backfill_depth=depth if depth_bounded else None,
+            with_classes=with_classes)
 
         # net per-invocation op accounting (jobs running before & after)
         still = running0 & (bstate == RUNNING)
@@ -421,8 +444,10 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             floor=g2(batch.floor, 1),
             shrink_floor=g2(batch.shrink_floor, 1),
             prio_ref=g2(batch.prio_ref, 0),
+            on_demand=g2(batch.on_demand, False),
             capacity=batch.capacity,
             tick=batch.tick,
+            backfill_depth=batch.backfill_depth,
         )
         n_prefetch = jnp.sum(sel & pending, axis=-1)
         lim_idx = aptr + n_prefetch
@@ -443,7 +468,7 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         )
         carry, ys = jax.lax.scan(
             lambda c, x: step(bj, batch.capacity, batch.tick,
-                              arrival_limit, c, x),
+                              batch.backfill_depth, arrival_limit, c, x),
             carry, None, length=K)
         (bstate, balloc, brem, bstart, bend, beops, bsops,
          k, retrig, _frozen) = carry

@@ -39,7 +39,9 @@ from repro.core.speedup import TransformConfig
 # Version of the reference numpy DES substrate (core/simulator.py).  Bump
 # whenever its event/scheduling semantics change so stored DES cells are
 # invalidated alongside the jax ENGINE_VERSION mechanism.
-DES_ENGINE_VERSION = 1
+# v2: workload-class queue priority (on-demand jobs outrank normal queued
+# jobs) and the scenario schema gaining job_classes / walltime_dist.
+DES_ENGINE_VERSION = 2
 
 
 def engine_version(engine: str) -> int:
@@ -70,7 +72,9 @@ def cell_fingerprint(workload: str, trace_seed: int, scale: float,
         "engine": engine,
         "engine_version": engine_version(engine),
         "transform": dataclasses.asdict(config),
-        "scenario": dataclasses.asdict(scenario),
+        # canonical form: a dead knob (e.g. walltime_seed at zero jitter)
+        # must hash identically to its default
+        "scenario": dataclasses.asdict(scenario.canonical()),
     }
 
 

@@ -13,7 +13,9 @@ import numpy as np
 import pytest
 
 from repro.core import ScenarioConfig, apply_scenario, traces
-from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
+from repro.core.jobs import (CLASS_NORMAL, CLASS_ON_DEMAND, CLASS_RIGID)
+from repro.core.scenario import (DEFAULT_BACKFILL_DEPTH, JobClasses,
+                                 assign_job_classes)
 from repro.core.speedup import TransformConfig
 from repro.experiments import (ExperimentSpec, load_artifact_results,
                                run_experiment, write_artifact)
@@ -55,13 +57,40 @@ def test_spec_key_stable_across_instances():
     {"transform": TransformConfig(e_pref=0.8)},
     {"scenario": ScenarioConfig(walltime_factor=0.0)},
     {"scenario": ScenarioConfig(walltime_jitter=0.5)},
+    {"scenario": ScenarioConfig(walltime_jitter=0.5,
+                                walltime_dist="uniform")},
+    {"scenario": ScenarioConfig(walltime_jitter=0.5, walltime_seed=7)},
     {"scenario": ScenarioConfig(arrival_compression=2.0)},
     {"scenario": ScenarioConfig(backfill_depth=16)},
+    {"scenario": ScenarioConfig(job_classes=JobClasses(
+        rigid=0.1, on_demand=0.2, malleable=0.7))},
+    {"scenario": ScenarioConfig(job_classes=JobClasses(
+        on_demand=0.2, malleable=0.8, seed=3))},
 ])
 def test_spec_key_invalidation(change):
     base = ExperimentSpec(**TINY)
     other = dataclasses.replace(base, **change)
     assert other.key() != base.key(), change
+
+
+def test_dead_scenario_knobs_do_not_invalidate():
+    """Knobs that cannot reach the result (jitter seed/dist at zero
+    jitter, class seed at default fractions, jitter under a zero factor)
+    hash to the canonical default — stored cells stay valid."""
+    base = ExperimentSpec(**TINY)
+    for dead in (ScenarioConfig(walltime_seed=99),
+                 ScenarioConfig(walltime_dist="uniform"),
+                 ScenarioConfig(job_classes=JobClasses(seed=42))):
+        same = dataclasses.replace(base, scenario=dead)
+        assert same.key() == base.key(), dead
+        cell = ("min", 1.0, 0)
+        assert SweepCache.key(same.cell_fingerprint("haswell", cell)) == \
+            SweepCache.key(base.cell_fingerprint("haswell", cell))
+    a = dataclasses.replace(base,
+                            scenario=ScenarioConfig(walltime_factor=0.0))
+    b = dataclasses.replace(base, scenario=ScenarioConfig(
+        walltime_factor=0.0, walltime_jitter=2.0, walltime_seed=5))
+    assert a.key() == b.key()
 
 
 def test_spec_key_tracks_engine_version(monkeypatch):
@@ -124,6 +153,79 @@ def test_apply_scenario_axes():
     # deterministic: the jitter is part of the scenario identity
     again = apply_scenario(w, ScenarioConfig(walltime_jitter=1.0))
     np.testing.assert_array_equal(jit.walltime, again.walltime)
+
+
+@pytest.mark.parametrize("fracs", [
+    (0.0, 0.0), (0.3, 0.3), (0.25, 0.5), (1.0, 0.0), (0.0, 1.0),
+    (0.123, 0.456),
+])
+def test_job_classes_fractions_partition_every_job_once(fracs):
+    """Fractions summing to 1 place every job in exactly one class, with
+    class sizes matching the rounded fractions."""
+    rigid, od = fracs
+    jc = JobClasses(rigid=rigid, on_demand=od,
+                    malleable=1.0 - rigid - od, seed=11)
+    for n in (1, 7, 100, 997):
+        cls = assign_job_classes(n, jc)
+        assert cls.shape == (n,)
+        k_r = int(round(rigid * n))
+        k_od = min(int(round(od * n)), n - k_r)
+        counts = {c: int(np.sum(cls == c)) for c in
+                  (CLASS_NORMAL, CLASS_RIGID, CLASS_ON_DEMAND)}
+        assert counts[CLASS_RIGID] == k_r
+        assert counts[CLASS_ON_DEMAND] == k_od
+        # partition: the three classes cover every job exactly once
+        assert sum(counts.values()) == n
+        # deterministic: same seed, same assignment
+        np.testing.assert_array_equal(cls, assign_job_classes(n, jc))
+
+
+def test_job_classes_fractions_must_sum_to_one():
+    with pytest.raises(ValueError):
+        JobClasses(rigid=0.5, on_demand=0.2, malleable=0.5)
+    with pytest.raises(ValueError):
+        JobClasses(rigid=-0.1, on_demand=0.0, malleable=1.1)
+
+
+def test_class_pinned_jobs_never_transformed():
+    """Even at proportion 1.0, rigid/on-demand-class jobs stay rigid, and
+    the batched transform agrees with the per-cell one bit-for-bit."""
+    from repro.core import transform_rigid_to_malleable
+    from repro.core.speedup import batched_malleable_params
+
+    w = traces.generate("haswell", seed=0, scale=0.003)
+    sc = ScenarioConfig(job_classes=JobClasses(
+        rigid=0.2, on_demand=0.3, malleable=0.5, seed=5))
+    wc = apply_scenario(w, sc)
+    wm = transform_rigid_to_malleable(wc, 1.0, seed=0, cluster_nodes=512)
+    assert not np.any(wm.malleable & (wc.job_class != CLASS_NORMAL))
+    assert np.all(wm.malleable[wc.job_class == CLASS_NORMAL])
+    wm.validate(512)
+    params = batched_malleable_params(wc, [(1.0, 0)], 512)
+    np.testing.assert_array_equal(params["malleable"][0], wm.malleable)
+    np.testing.assert_array_equal(params["min_nodes"][0], wm.min_nodes)
+
+
+def test_walltime_dist_named_distributions():
+    w = traces.generate("haswell", seed=0, scale=0.003)
+    for dist in ("lognormal", "uniform", "exact_frac"):
+        sc = ScenarioConfig(walltime_jitter=0.5, walltime_dist=dist)
+        out = apply_scenario(w, sc)
+        out.validate()
+        assert np.all(out.walltime >= out.runtime)
+        # deterministic (spec-seeded), and seeds change the draw
+        again = apply_scenario(w, sc)
+        np.testing.assert_array_equal(out.walltime, again.walltime)
+        other = apply_scenario(w, dataclasses.replace(
+            sc, walltime_seed=123))
+        assert np.any(out.walltime != other.walltime)
+    # exact_frac: jitter is the fraction of jobs with exact estimates
+    sc = ScenarioConfig(walltime_jitter=0.5, walltime_dist="exact_frac")
+    out = apply_scenario(w, sc)
+    frac = float(np.mean(out.walltime == out.runtime))
+    assert 0.3 < frac < 0.7
+    with pytest.raises(ValueError):
+        ScenarioConfig(walltime_dist="cauchy")
 
 
 _CONTENDED = dict(workloads=("theta",), scale=0.05, seeds=1,
@@ -303,3 +405,113 @@ def test_jax_des_backend_parity_same_spec(tmp_path):
         for cell in spec.cells():
             assert store.get(spec.cell_fingerprint("haswell", cell)) \
                 is not None, (spec.engine, cell)
+
+
+@pytest.mark.parametrize("scenario", [
+    ScenarioConfig(backfill_depth=2, arrival_compression=4.0),
+    ScenarioConfig(job_classes=JobClasses(
+        on_demand=0.3, malleable=0.7), arrival_compression=4.0),
+])
+def test_jax_des_parity_on_scenario_axes(scenario):
+    """The depth-bounded scan and the job-class queue priority stay within
+    the documented engine tolerances on a contended depth-swept spec —
+    the axes are engine-faithful, not DES-only."""
+    from repro.experiments.crosscheck import CROSSCHECK_TOLERANCES
+    base = dict(workloads=("haswell",), scale=0.003, seeds=1,
+                proportions=(0.0, 1.0), strategies=("min",),
+                scenario=scenario)
+    des = run_experiment(ExperimentSpec(**base, engine="des"),
+                         verbose=False)["haswell"]
+    jx = run_experiment(ExperimentSpec(**base, engine="jax"),
+                        backend_options={"window": 32, "chunk": 64},
+                        verbose=False)["haswell"]
+    for cell_key in ("rigid", "min@100"):
+        suffix = "" if cell_key == "rigid" else "_mean"
+        for metric, (rtol, atol) in CROSSCHECK_TOLERANCES.items():
+            a = des[cell_key][metric + suffix]
+            b = jx[cell_key][metric + suffix]
+            assert abs(b - a) <= max(rtol * abs(a), atol), (cell_key,
+                                                            metric)
+
+
+def test_backfill_depth_changes_results_through_spec():
+    """A depth-swept spec changes metrics on BOTH engines (regression:
+    the batched engine used to ignore the axis)."""
+    for engine in ("des", "jax"):
+        base = ExperimentSpec(
+            workloads=("theta",), scale=0.05, seeds=1, engine=engine,
+            proportions=(0.0,), strategies=("min",),
+            scenario=ScenarioConfig(arrival_compression=6.0))
+        shallow = dataclasses.replace(base, scenario=ScenarioConfig(
+            arrival_compression=6.0, backfill_depth=1))
+        a = run_experiment(base, verbose=False)["theta"]["rigid"]
+        b = run_experiment(shallow, verbose=False)["theta"]["rigid"]
+        assert a["wait_mean"] != b["wait_mean"], engine
+
+
+def test_incomplete_lanes_split_from_computed(monkeypatch, tmp_path):
+    """Lanes cut off by the step budget count as incomplete, not
+    computed, so resume summaries cannot overstate coverage."""
+    from repro.core.jobs import DONE
+    from repro.experiments import backend_jax
+
+    real = backend_jax.simulate_lanes
+
+    def cut_first_lane(batch, cfg, verbose=False):
+        res = real(batch, cfg, verbose=verbose)
+        res["state"] = np.array(res["state"])
+        res["state"][0, -1] = 2  # pretend lane 0 never finished
+        res["finished"] = bool(np.all(res["state"] == DONE))
+        return res
+
+    monkeypatch.setattr(backend_jax, "simulate_lanes", cut_first_lane)
+    spec = ExperimentSpec(**dict(TINY, seeds=1, strategies=("min",)),
+                          engine="jax")
+    results = run_experiment(spec, cache_dir=tmp_path,
+                             verbose=False)["haswell"]
+    info = results["_engine"]
+    n_cells = len(spec.cells())
+    assert info["incomplete_cells_total"] >= 1
+    assert info["computed_cells"] == n_cells - \
+        info["incomplete_cells_total"]
+    assert info["incomplete_cells"] == info["incomplete_cells_total"]
+    # incomplete cells were not written to the store
+    store = SweepCache(tmp_path)
+    stored = sum(store.get(spec.cell_fingerprint("haswell", c))
+                 is not None for c in spec.cells())
+    assert stored == info["computed_cells"]
+
+
+def test_compare_scenarios_reporter(tmp_path, capsys):
+    """--compare-scenarios sweeps one axis and renders the sensitivity
+    table; the artifact holds one result set per value."""
+    from repro.experiments import __main__ as exp_main
+
+    out = tmp_path / "sens.json"
+    rc = exp_main.main([
+        "--workload", "haswell", "--scale", "0.003", "--seeds", "1",
+        "--proportions", "0.0", "1.0", "--strategies", "min",
+        "--engine", "des", "--cache-dir", str(tmp_path / "store"),
+        "--compare-scenarios", "backfill_depth",
+        "--scenario-values", "1", "256", "--out", str(out)])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "Scenario sensitivity" in text
+    assert "backfill_depth=1" in text and "backfill_depth=256" in text
+    payload = json.loads(out.read_text())
+    assert payload["axis"] == "backfill_depth"
+    assert set(payload["results"]) == {"1.0", "256.0"}
+    for res in payload["results"].values():
+        assert "rigid" in res["haswell"]
+
+
+def test_scenario_variant_axes():
+    from repro.experiments import scenario_variant
+    base = ScenarioConfig()
+    v = scenario_variant(base, "on_demand_frac", 0.4)
+    assert v.job_classes == JobClasses(rigid=0.0, on_demand=0.4,
+                                       malleable=0.6)
+    v = scenario_variant(base, "backfill_depth", 4)
+    assert v.backfill_depth == 4 and isinstance(v.backfill_depth, int)
+    with pytest.raises(ValueError):
+        scenario_variant(base, "nope", 1.0)

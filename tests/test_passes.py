@@ -182,6 +182,126 @@ def test_three_way_engine_parity_small_grid(name, prop):
     np.testing.assert_allclose(res["end_t"][0][inv], ref.end, atol=4.0)
 
 
+# ------------------------------------------------- backfill depth (bound)
+def _depth_workload():
+    """Depth-sensitive trace: the first candidate behind the blocked head
+    cannot backfill (it would outlive the reservation with no spare pool),
+    the second can.  With ``backfill_depth=1`` the scan stops before the
+    fitting candidate; any deeper scan admits it at submit time.
+    """
+    return Workload.rigid(
+        submit=np.array([0.0, 1.0, 2.0, 3.0]),
+        runtime=np.array([50.0, 30.0, 200.0, 10.0]),
+        nodes_req=np.array([8, 10, 2, 2]))
+
+
+def _depth_starts(engine, w, depth):
+    if engine == "des":
+        return simulate(w, TINY, STRATEGIES["easy"],
+                        backfill_depth=depth).start
+    if engine == "sim_jax":
+        st, _ = simulate_jax(w, TINY.nodes, TINY.tick, 400,
+                             STRATEGIES["easy"], backfill_depth=depth)
+        return np.asarray(st.start_t)
+    batch, order = build_lanes(w, TINY.nodes,
+                               [(STRATEGIES["easy"], 0.0, 0)],
+                               backfill_depth=depth)
+    res = simulate_lanes(batch, EngineConfig(window=8, chunk=32))
+    return res["start_t"][0][np.argsort(order)]
+
+
+@pytest.mark.parametrize("engine", ["des", "sim_jax", "batch"])
+def test_backfill_depth_changes_schedule(engine):
+    """backfill_depth=1 vs. the default produce *different* schedules in
+    every engine: the axis bounds the scan itself, engine-faithfully."""
+    w = _depth_workload()
+    shallow = _depth_starts(engine, w, 1)
+    deep = _depth_starts(engine, w, 256)
+    # the fitting candidate backfills only when the scan reaches it
+    assert deep[3] <= 5.0 + 2 * TINY.tick
+    assert shallow[3] >= shallow[1] + 1.0  # waited for the head instead
+    assert np.any(shallow != deep)
+
+
+def test_backfill_depth_consistent_across_engines():
+    """All three engines agree on the depth-bounded schedule within the
+    documented tick quantization, at every depth."""
+    w = _depth_workload()
+    for depth in (1, 2, 256):
+        ref = _depth_starts("des", w, depth)
+        for engine in ("sim_jax", "batch"):
+            np.testing.assert_allclose(
+                _depth_starts(engine, w, depth), ref,
+                atol=2 * TINY.tick, err_msg=f"{engine} depth={depth}")
+
+
+def test_batched_depth_swept_lanes_share_one_batch():
+    """backfill_depth is per-lane data: depth-swept lanes in one batch
+    reproduce the per-depth solo runs bit-for-bit."""
+    from repro.sweep.batch import BatchedLanes
+
+    w = _depth_workload()
+    cfg = EngineConfig(window=8, chunk=32)
+    solo = {}
+    batches = []
+    for depth in (1, 256):
+        batch, _order = build_lanes(w, TINY.nodes,
+                                    [(STRATEGIES["easy"], 0.0, 0)],
+                                    backfill_depth=depth)
+        solo[depth] = simulate_lanes(batch, cfg)
+        batches.append(batch)
+    both = BatchedLanes(*[
+        jnp.concatenate([getattr(b, name) for b in batches])
+        for name in BatchedLanes._fields])
+    res = simulate_lanes(both, cfg)
+    np.testing.assert_array_equal(res["start_t"][0], solo[1]["start_t"][0])
+    np.testing.assert_array_equal(res["start_t"][1],
+                                  solo[256]["start_t"][0])
+
+
+# ------------------------------------------------ on-demand queue priority
+def _od_workload():
+    """A running 8-node job; a normal 6-node job queues first; a 6-node
+    on-demand job arrives later and must start first."""
+    from repro.core.jobs import CLASS_ON_DEMAND
+    w = Workload.rigid(
+        submit=np.array([0.0, 1.0, 2.0]),
+        runtime=np.array([50.0, 40.0, 40.0]),
+        nodes_req=np.array([8, 6, 6]))
+    w.job_class[2] = CLASS_ON_DEMAND
+    return w
+
+
+@pytest.mark.parametrize("engine", ["des", "sim_jax", "batch"])
+def test_on_demand_outranks_earlier_normal_job(engine):
+    w = _od_workload()
+    start = _depth_starts(engine, w, 256)
+    # the on-demand job takes the release at t=50; the earlier-submitted
+    # normal job waits behind it
+    assert start[2] == pytest.approx(50.0, abs=2 * TINY.tick)
+    assert start[1] >= start[2] + 30.0
+
+
+@pytest.mark.parametrize("engine", ["des", "sim_jax", "batch"])
+def test_on_demand_backfills_before_earlier_normal_candidate(engine):
+    """Backfill admission follows (class, submit) order too: with budget
+    for one candidate, the on-demand one backfills and the
+    earlier-submitted normal one waits — in every engine."""
+    from repro.core.jobs import CLASS_ON_DEMAND
+    # jobs 0-1 fill the cluster until t=20, when 2 nodes free up; by then
+    # the od head (job 2) and BOTH candidates are queued, and the 2 free
+    # nodes admit exactly one backfill candidate
+    w = Workload.rigid(
+        submit=np.array([0.0, 0.0, 2.0, 3.0, 4.0]),
+        runtime=np.array([60.0, 20.0, 30.0, 10.0, 10.0]),
+        nodes_req=np.array([8, 2, 10, 2, 2]))
+    w.job_class[2] = CLASS_ON_DEMAND  # blocked head (od outranks all)
+    w.job_class[4] = CLASS_ON_DEMAND  # the late od candidate
+    start = _depth_starts(engine, w, 256)
+    assert start[4] == pytest.approx(20.0, abs=2 * TINY.tick)  # od first
+    assert start[3] >= start[4] + 5.0        # normal candidate waits
+
+
 # -------------------------------------------------- pallas expand backend
 @pytest.mark.parametrize("trial", range(4))
 def test_pallas_give_matches_bisection_give(trial):

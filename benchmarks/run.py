@@ -1,7 +1,12 @@
 """Benchmark orchestrator: one artifact per paper table/figure + roofline.
 
 Default (CI-friendly) scale runs reduced traces; ``--full`` reproduces the
-paper-scale sweeps (hours on one CPU core).
+paper-scale sweeps (scale 1.0, 10 seeds).  Paper scale is a long run, not
+a bigger box: ``--engine jax`` streams the grid as lane chunks sized by
+``--chunk-lanes`` (optionally ``--devices``-sharded), flushing each
+completed chunk into the shared cell store so an interrupted run resumes
+where it stopped — commands, chunk sizing and expected wall-clock live in
+``docs/paper-scale.md``.
 
 Sweeps route through the declarative experiment layer
 (:mod:`repro.experiments`): one :class:`~repro.experiments.ExperimentSpec`
@@ -10,9 +15,13 @@ store under ``artifacts/sweep_cache``, and whole-file sweep artifacts
 (``artifacts/sweep-<name>.json``) are reused **only** when their recorded
 spec fingerprint matches the requested experiment — a cached artifact from
 a different scale, seed count, scenario, engine or engine version is
-recomputed, never silently replayed.
+recomputed, never silently replayed.  Each sweep batch records wall-clock,
+per-chunk timings and the peak device-resident lane width to
+``artifacts/sweep-timing-{engine}.json``.
 
   PYTHONPATH=src python -m benchmarks.run [--scale 0.15] [--seeds 3]
+  PYTHONPATH=src python -m benchmarks.run --engine jax --full \
+      --chunk-lanes 16
 """
 from __future__ import annotations
 
@@ -24,7 +33,10 @@ import time
 from repro.experiments import (ExperimentSpec, best_improvements,
                                load_artifact_results, render_sweep_table,
                                run_experiment, write_artifact)
-from repro.experiments.cli import add_scenario_arguments, scenario_from_args
+from repro.experiments.cli import (add_execution_arguments,
+                                   add_scenario_arguments,
+                                   backend_options_from_args,
+                                   scenario_from_args)
 
 from . import figures, paper_tables, roofline
 
@@ -46,6 +58,7 @@ def main(argv=None) -> int:
                          "device-resident JAX engine")
     ap.add_argument("--workers", type=int, default=0,
                     help="[des] cell-parallel worker processes")
+    add_execution_arguments(ap)
     add_scenario_arguments(ap)
     ap.add_argument("--skip-sweeps", action="store_true")
     ap.add_argument("--no-reuse", action="store_true",
@@ -119,7 +132,7 @@ def main(argv=None) -> int:
                 cache_dir=None if args.no_reuse
                 else str(ARTIFACTS / "sweep_cache"),
                 xla_cache_dir=str(ARTIFACTS / "xla_cache"),
-                backend_options={"workers": args.workers})
+                backend_options=backend_options_from_args(args))
             batch_wall = time.monotonic() - t_sw
             all_results.update(computed)
 
@@ -143,7 +156,9 @@ def main(argv=None) -> int:
             # --engine des / --engine jax leaves a comparable pair in
             # artifacts/ (see sweep/README.md "Performance").  Either
             # engine runs the remaining workloads as one experiment, so
-            # only the batch total is real.
+            # only the batch total is real; the jax engine_info also
+            # carries per-chunk wall-clock and the peak device-resident
+            # lane width (the docs/paper-scale.md sizing inputs).
             timing_path = ARTIFACTS / f"sweep-timing-{args.engine}.json"
             timing = {"engine": args.engine, "scale": args.scale,
                       "seeds": args.seeds, "batch_workloads": to_run,

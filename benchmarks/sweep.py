@@ -13,8 +13,10 @@ share the per-cell result store (resume/incremental reuse):
   * ``--engine des`` (default): the reference numpy DES, one simulation
     per cell, optionally ``--workers N`` process-parallel;
   * ``--engine jax``: the batched device-resident engine, the whole grid
-    as fixed-shape lanes on one device, ``--crosscheck``-able against
-    the DES.
+    as fixed-shape lanes — monolithic by default, or streamed as
+    resumable lane chunks (``--chunk-lanes``) and sharded across local
+    devices (``--devices``; see ``docs/paper-scale.md``) —
+    ``--crosscheck``-able against the DES.
 
 ``--compare-engines`` runs both on the same grid and reports wall-clock.
 

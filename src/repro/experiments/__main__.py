@@ -35,10 +35,15 @@ from .report import (SCENARIO_AXES, best_improvements,
 from .run import run_experiment, sweep_scenario_axis, write_artifact
 
 
-def main(argv=None) -> int:
+def main(argv=None, prog=None, epilog=None) -> int:
+    """Run the experiment CLI.  ``prog``/``epilog`` let delegating entry
+    points (``python -m repro.sweep``) keep their own ``--help`` identity
+    and document engine-specific flags."""
     ap = argparse.ArgumentParser(
-        prog="python -m repro.experiments",
-        description=__doc__.splitlines()[0])
+        prog=prog or "python -m repro.experiments",
+        description=__doc__.splitlines()[0],
+        epilog=epilog,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     add_spec_arguments(ap)
     add_backend_arguments(ap)
     ap.add_argument("--crosscheck", type=int, default=0,

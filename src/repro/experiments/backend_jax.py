@@ -10,6 +10,16 @@ four supercomputer grids.  Per-cell metrics come back through
 :mod:`repro.sweep.metrics_jax`; only lanes that ran to completion are
 written to the cell store.
 
+Execution is chunked and shardable (:mod:`repro.sweep.shard`): the
+``chunk_lanes`` budget streams each structure's batch as sequential lane
+chunks sized for the box, and ``devices`` lane-shards every chunk across a
+1-D local device mesh.  Each completed chunk's cells are **flushed to the
+store before the next chunk starts**, so an interrupted paper-scale run
+resumes chunk-by-chunk (see ``docs/paper-scale.md``).  Both knobs are
+results-neutral by construction — chunked/sharded cells are bit-identical
+to the monolithic batch (``tests/test_shard.py``) — and therefore never
+part of a spec or cell fingerprint.
+
 Scenario axes: walltime accuracy/distribution, arrival compression and
 job classes are applied to the trace before lane construction
 (bit-identical to the DES backend's input); ``backfill_depth`` is lane
@@ -19,8 +29,9 @@ the spec's depth both keys the cell store *and* changes the schedule.
 
 Backend options (results-neutral tuning, not part of the spec):
 ``window`` (active-set slots, 0 = auto), ``chunk`` (scan steps between
-compactions), ``expand_backend`` (``bisect`` | ``pallas`` |
-``pallas-interpret``).
+compactions), ``chunk_lanes`` (max device-resident lanes, 0 = whole
+batch), ``devices`` (lane shards, 0 = all local devices),
+``expand_backend`` (``bisect`` | ``pallas`` | ``pallas-interpret``).
 """
 from __future__ import annotations
 
@@ -32,9 +43,11 @@ import numpy as np
 
 from repro.core import DONE, get_strategy
 from repro.sweep.batch import (EngineConfig, build_lanes, concat_lanes,
-                               simulate_lanes)
+                               simulate_lanes)  # noqa: F401 (re-export)
 from repro.sweep.cache import SweepCache
 from repro.sweep.metrics_jax import batched_metrics
+from repro.sweep.shard import (ShardConfig, describe_plan,
+                               simulate_lanes_chunked)
 
 from .spec import Cell, ExperimentSpec, prepare_workload
 
@@ -56,8 +69,19 @@ def run_cells(spec: ExperimentSpec,
               fingerprints: Dict[Tuple[str, Cell], Dict],
               options: Optional[Dict] = None,
               verbose: bool = True) -> Tuple[Dict, Dict]:
-    """Run ``todo`` cells on the batched engine; one batch per structure."""
+    """Run ``todo`` cells on the batched engine; one batch per structure.
+
+    Each structure's batch is executed through the chunked/sharded plan
+    (:func:`repro.sweep.shard.simulate_lanes_chunked`); with the default
+    plan that is one monolithic chunk, i.e. exactly the historical
+    behaviour.  Completed cells are written to the store per chunk, and
+    ``info["chunks"]`` records each chunk's wall-clock and executed lane
+    width (surfaced into ``artifacts/sweep-timing-jax.json`` by
+    ``benchmarks/run.py``).
+    """
     opts = options or {}
+    shard = ShardConfig(chunk_lanes=int(opts.get("chunk_lanes", 0)),
+                        devices=int(opts.get("devices", 0)))
     names = [n for n in spec.workloads if any(n == m for m, _ in todo)]
     wls = {name: prepare_workload(spec, name) for name in names}
 
@@ -67,7 +91,9 @@ def run_cells(spec: ExperimentSpec,
     }
     t0 = time.monotonic()
     metrics: Dict[Tuple[str, Cell], Dict[str, float]] = {}
-    info: Dict[str, object] = {"incomplete": []}
+    info: Dict[str, object] = {"incomplete": [], "chunks": [],
+                               "chunk_lanes": shard.chunk_lanes,
+                               "peak_lane_width": 0}
     for balanced, group in groups.items():
         if not group:
             continue
@@ -87,6 +113,8 @@ def run_cells(spec: ExperimentSpec,
             t1s += [window.t1] * len(lanes)
             caps += [cl.nodes] * len(lanes)
         big = concat_lanes(batches) if len(batches) > 1 else batches[0]
+        win0, win1 = np.asarray(t0s), np.asarray(t1s)
+        caps_arr = np.asarray(caps)
         cfg = EngineConfig(balanced=balanced,
                            window=int(opts.get("window", 0)),
                            chunk=int(opts.get("chunk", 160)),
@@ -94,26 +122,51 @@ def run_cells(spec: ExperimentSpec,
                                opts.get("max_steps_factor", 16)),
                            expand_backend=opts.get("expand_backend",
                                                    "bisect"))
-        res = simulate_lanes(big, cfg, verbose=verbose)
-        per_lane = batched_metrics(
-            res, big.submit, big.malleable,
-            (np.asarray(t0s), np.asarray(t1s)), np.asarray(caps))
-        # only completed lanes enter the persistent store: a lane cut off
-        # by the step budget has partial metrics that must not be replayed
-        lane_done = np.all(res["state"] == DONE, axis=1)
-        # group is workload-major, matching the per-name lane stacking
-        for key, m, done in zip(group, per_lane, lane_done):
-            metrics[key] = m
-            if bool(done):
-                if store is not None:
-                    store.put(fingerprints[key], m)
-            else:
-                info["incomplete"].append(key)
         tag = "balanced" if balanced else "greedy"
+        if verbose:
+            plan = describe_plan(big.n_lanes, shard)
+            if plan["chunks"] > 1 or plan["devices"] > 1:
+                print(f"[experiment-jax:{'+'.join(names)}] {tag} plan: "
+                      f"{plan['n_lanes']} lanes as {plan['chunks']} "
+                      f"chunk(s) of width {plan['lane_width']} on "
+                      f"{plan['devices']} device(s)")
+        steps_total, window_peak, budget_cut = 0, 0, False
+        for ch in simulate_lanes_chunked(big, cfg, shard, verbose=verbose):
+            res = ch.results
+            per_lane = batched_metrics(
+                res, big.submit[ch.lo:ch.hi], big.malleable[ch.lo:ch.hi],
+                (win0[ch.lo:ch.hi], win1[ch.lo:ch.hi]),
+                caps_arr[ch.lo:ch.hi])
+            # only completed lanes enter the persistent store: a lane cut
+            # off by the step budget has partial metrics that must not be
+            # replayed.  The flush happens before the next chunk runs, so
+            # an interrupted stream resumes from the last finished chunk.
+            lane_done = np.all(res["state"] == DONE, axis=1)
+            # group is workload-major, matching the per-name lane stacking
+            for key, m, done in zip(group[ch.lo:ch.hi], per_lane,
+                                    lane_done):
+                metrics[key] = m
+                if bool(done):
+                    if store is not None:
+                        store.put(fingerprints[key], m)
+                else:
+                    info["incomplete"].append(key)
+            steps_total += int(res["steps"])
+            window_peak = max(window_peak, int(res["window"]))
+            budget_cut = budget_cut or not res["finished"]
+            info["chunks"].append({
+                "structure": tag, "lanes": ch.hi - ch.lo,
+                "lane_width": ch.lane_width, "devices": ch.n_devices,
+                "wall_s": ch.wall_s, "steps": int(res["steps"]),
+                "window": int(res["window"]),
+            })
+            info["peak_lane_width"] = max(info["peak_lane_width"],
+                                          ch.lane_width)
+            info["devices"] = ch.n_devices
         info[f"{tag}_lanes"] = len(group)
-        info[f"{tag}_steps"] = res["steps"]
-        info[f"{tag}_window"] = res["window"]
-        if not res["finished"]:
+        info[f"{tag}_steps"] = steps_total
+        info[f"{tag}_window"] = window_peak
+        if budget_cut:
             print(f"[experiment-jax:{'+'.join(names)}] WARNING: {tag} batch "
                   "hit the step budget with unfinished lanes")
     info["sim_seconds"] = time.monotonic() - t0

@@ -123,6 +123,34 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
     )
 
 
+def add_execution_arguments(ap: argparse.ArgumentParser) -> None:
+    """[jax] engine execution knobs — results-neutral by construction
+    (chunked/sharded cells are bit-identical to the monolithic batch;
+    ``tests/test_shard.py``), so none of them ever enters a spec or cell
+    fingerprint.  Shared by every jax-capable grid CLI, including
+    ``benchmarks/run.py`` which manages its own cache/worker flags."""
+    ap.add_argument("--window", type=int, default=0,
+                    help="[jax] active-set window slots (0 = auto)")
+    ap.add_argument("--chunk", type=int, default=160,
+                    help="[jax] scan steps between window compactions")
+    ap.add_argument("--chunk-lanes", "--max-lane-width", dest="chunk_lanes",
+                    type=int, default=0, metavar="N",
+                    help="[jax] max device-resident lanes per chunk; the "
+                         "batch streams as sequential chunks, each flushed "
+                         "to the cell store on completion so interrupted "
+                         "runs resume chunk-by-chunk (0 = whole batch at "
+                         "once; see docs/paper-scale.md)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="[jax] lane-shard each chunk across N local "
+                         "devices over a 1-D mesh (0 = all local devices, "
+                         "1 = no sharding)")
+    ap.add_argument("--expand-backend", default="bisect",
+                    choices=["bisect", "pallas", "pallas-interpret"],
+                    help="[jax] Step-3 greedy expand backend: sort-free "
+                         "threshold bisection (default) or the Pallas "
+                         "prefix-waterfill kernel")
+
+
 def add_backend_arguments(ap: argparse.ArgumentParser, *,
                           default_cache_dir: str = "artifacts/sweep_cache"
                           ) -> None:
@@ -132,16 +160,11 @@ def add_backend_arguments(ap: argparse.ArgumentParser, *,
     ap.add_argument("--workers", type=int, default=0,
                     help="[des] cell-parallel worker processes "
                          "(0/1 serial, -1 per CPU)")
-    ap.add_argument("--window", type=int, default=0,
-                    help="[jax] active-set window slots (0 = auto)")
-    ap.add_argument("--chunk", type=int, default=160)
-    ap.add_argument("--expand-backend", default="bisect",
-                    choices=["bisect", "pallas", "pallas-interpret"],
-                    help="[jax] Step-3 greedy expand backend: sort-free "
-                         "threshold bisection (default) or the Pallas "
-                         "prefix-waterfill kernel")
+    add_execution_arguments(ap)
 
 
 def backend_options_from_args(args: argparse.Namespace) -> dict:
-    return {"workers": args.workers, "window": args.window,
-            "chunk": args.chunk, "expand_backend": args.expand_backend}
+    return {"workers": getattr(args, "workers", 0), "window": args.window,
+            "chunk": args.chunk, "chunk_lanes": args.chunk_lanes,
+            "devices": args.devices,
+            "expand_backend": args.expand_backend}

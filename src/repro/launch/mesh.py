@@ -4,12 +4,34 @@
 importing this module touches no jax device state.  Target: TPU v5e pods —
 one pod = a 16x16 (256-chip) mesh with axes (data, model); two pods add a
 leading "pod" axis that data-parallelism spans (DP = pod x data).
+
+``make_lane_mesh`` is the 1-D counterpart used by the sweep engine's
+sharded execution layer (:mod:`repro.sweep.shard`): lanes of a batched
+sweep are embarrassingly parallel, so a flat device list partitioned
+along one ``"lanes"`` axis is the whole story.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence
 
 import jax
+
+
+def make_lane_mesh(devices: Optional[Sequence] = None):
+    """1-D mesh over ``devices`` (default: all local) with axis ``lanes``.
+
+    Used with ``NamedSharding(mesh, PartitionSpec("lanes"))`` to split the
+    lane-leading arrays of a :class:`repro.sweep.batch.BatchedLanes` batch
+    across devices; every per-lane computation then runs device-parallel
+    under GSPMD with no cross-device traffic on the hot path (the only
+    cross-lane reductions are scalar control-flow peeks).
+    """
+    import numpy as _np
+    devs = list(jax.devices() if devices is None else devices)
+    if not devs:
+        raise ValueError("lane mesh needs at least one device")
+    return jax.sharding.Mesh(_np.array(devs), ("lanes",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -36,6 +36,12 @@ strategy *parameters* (start want/floor, shrink floor, priority reference)
 are data, so EASY/MIN/PREF/KEEPPREF lanes share one compilation and one
 batch.
 
+Because per-lane results are independent of batch composition, a batch can
+also be *split* along the lane axis (:func:`take_lanes` / :func:`pad_lanes`)
+and executed as smaller chunks — sequentially on memory-bounded boxes, or
+sharded across local devices — without changing any lane's result; that
+execution layer lives in :mod:`repro.sweep.shard`.
+
 Fidelity vs. the reference DES (documented in ``sweep/README.md``):
 completions and starts quantized to tick boundaries; EASY backfill honours
 the head's shadow-time reservation (:func:`repro.core.passes.
@@ -50,7 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, NamedTuple, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -213,6 +219,61 @@ def concat_lanes(batches: Sequence[BatchedLanes]) -> BatchedLanes:
     ])
 
 
+def take_lanes(batch: BatchedLanes, lo: int, hi: int) -> BatchedLanes:
+    """Slice a contiguous lane range ``[lo, hi)`` out of a batch.
+
+    Every field of :class:`BatchedLanes` is lane-leading (``(B, n)`` or
+    ``(B,)``), so the slice is uniform.  Per-lane results are independent
+    of batch composition (the multi-trace bit-parity property), which is
+    what lets :mod:`repro.sweep.shard` stream a big batch as smaller lane
+    chunks without changing any cell.
+    """
+    return BatchedLanes(*[getattr(batch, name)[lo:hi]
+                          for name in BatchedLanes._fields])
+
+
+def pad_lanes(batch: BatchedLanes, width: int) -> BatchedLanes:
+    """Right-pad a batch to ``width`` lanes by repeating its first lane.
+
+    Repeating an existing lane keeps every batch-level static derived from
+    lane maxima/minima (priority bounds, class gating, depth cutoff,
+    window peeks) unchanged, so padded lanes cannot perturb the real ones;
+    callers discard the padding rows from the result.
+    """
+    b = batch.n_lanes
+    if width < b:
+        raise ValueError(f"cannot pad {b} lanes down to {width}")
+    if width == b:
+        return batch
+    idx = np.concatenate([np.arange(b), np.zeros(width - b, np.int64)])
+    return BatchedLanes(*[jnp.take(getattr(batch, name), idx, axis=0)
+                          for name in BatchedLanes._fields])
+
+
+def lane_statics(batch: BatchedLanes) -> Dict[str, int]:
+    """Batch-level static compile parameters derived from lane data.
+
+    ``prio_lo``/``prio_hi``/``span_max`` bound the greedy/balanced passes'
+    integer and level bisections, ``with_classes`` gates the on-demand
+    queue-priority passes, ``min_depth`` decides whether the EASY rank
+    cutoff can bind.  They only need to *cover* the lanes actually run, so
+    a chunked execution (:mod:`repro.sweep.shard`) computes them once on
+    the **full** batch and reuses them for every chunk — keeping each
+    chunk's compiled pass (notably the balanced level bisection, whose
+    iteration count follows ``span_max``) bit-identical to the monolithic
+    batch's, and every chunk on one compilation.
+    """
+    return {
+        "prio_lo": -int(np.max(np.asarray(batch.prio_ref))),
+        "prio_hi": int(np.max(np.asarray(batch.max_nodes
+                                         - batch.prio_ref))),
+        "span_max": int(np.max(np.asarray(batch.max_nodes
+                                          - batch.min_nodes))),
+        "with_classes": bool(np.any(np.asarray(batch.on_demand))),
+        "min_depth": int(np.min(np.asarray(batch.backfill_depth))),
+    }
+
+
 @jax.jit
 def _peek_active(state):
     """Largest per-lane queued+running count — the window lower bound."""
@@ -221,7 +282,9 @@ def _peek_active(state):
 
 
 def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
-                   verbose: bool = False) -> Dict[str, np.ndarray]:
+                   verbose: bool = False,
+                   statics: Optional[Dict[str, int]] = None
+                   ) -> Dict[str, np.ndarray]:
     """Run every lane to completion; returns per-job outcomes + event trace.
 
     Output dict (numpy, job axes in submit-sorted order):
@@ -240,18 +303,22 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     If lanes are still unfinished when the step budget runs out, their
     jobs keep ``end_t = nan`` and ``finished`` is False (metrics report
     them as unfinished).
+
+    ``statics`` overrides the batch-derived compile parameters
+    (:func:`lane_statics`); chunked execution passes the full batch's so
+    every chunk shares one compilation and the monolithic bit-parity.
     """
     n, B = batch.n_jobs, batch.n_lanes
+    st = lane_statics(batch) if statics is None else statics
     # static greedy-priority bounds: every alloc lies in [0, max_nodes]
-    prio_lo = -int(np.max(np.asarray(batch.prio_ref)))
-    prio_hi = int(np.max(np.asarray(batch.max_nodes - batch.prio_ref)))
-    span_max = int(np.max(np.asarray(batch.max_nodes - batch.min_nodes)))
+    prio_lo, prio_hi = st["prio_lo"], st["prio_hi"]
+    span_max = st["span_max"]
     # static: class-free batches compile the class-free pass (no overhead)
-    with_classes = bool(np.any(np.asarray(batch.on_demand)))
+    with_classes = st["with_classes"]
     # queue ranks never exceed the window's queued count, so a depth >= W
     # cannot cut the scan: such compilations skip the rank mask entirely
     # (the default-depth grid pays nothing for the axis)
-    min_depth = int(np.min(np.asarray(batch.backfill_depth)))
+    min_depth = st["min_depth"]
     W_min = int(min(cfg.window or 128, n))
     W = W_min
 

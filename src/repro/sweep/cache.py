@@ -17,10 +17,14 @@ fingerprint that includes everything that determines the metrics:
 Entries are one small JSON file per cell, sharded by the first two key hex
 chars.  Both experiment backends (:mod:`repro.experiments.backend_des`,
 :mod:`repro.experiments.backend_jax`) write completed cells through this
-store as they finish, so repeated sweeps skip completed cells, an
-interrupted sweep resumes where it stopped, and the DES crosscheck reads
-reference cells (des-engine fingerprints) an earlier sweep or crosscheck
-already paid for.
+store as they finish — the jax backend flushes per completed *lane chunk*
+(:mod:`repro.sweep.shard`), the DES per cell — so repeated sweeps skip
+completed cells, an interrupted sweep resumes where it stopped (at chunk
+granularity on the jax engine), and the DES crosscheck reads reference
+cells (des-engine fingerprints) an earlier sweep or crosscheck already
+paid for.  Execution-plan knobs (chunk width, device count, window sizes)
+are never part of a fingerprint: a cell means the same thing however it
+was computed.
 
 This module never imports jax: the DES backend stays accelerator-free, and
 the jax engine version is resolved lazily from :mod:`repro.sweep.batch`.
@@ -94,6 +98,11 @@ class SweepCache:
 
     def _path(self, key: str) -> pathlib.Path:
         return self.root / key[:2] / f"{key}.json"
+
+    def has(self, fingerprint: Dict) -> bool:
+        """Whether a cell is stored, without reading or counting it
+        (resume inspection: "how much of this grid is already paid for")."""
+        return self._path(self.key(fingerprint)).exists()
 
     def get(self, fingerprint: Dict) -> Optional[Dict[str, float]]:
         path = self._path(self.key(fingerprint))

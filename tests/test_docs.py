@@ -1,0 +1,19 @@
+"""Docs stay navigable: every relative markdown link resolves.
+
+Thin tier-1 wrapper around ``tools/check_doc_links.py`` (the same
+script CI's docs-link-check step runs), so a broken README/docs link
+fails locally before it fails in CI.
+"""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_all_relative_doc_links_resolve(capsys):
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_doc_links
+    finally:
+        sys.path.pop(0)
+    assert check_doc_links.check() == 0, capsys.readouterr().err

@@ -453,18 +453,20 @@ def test_incomplete_lanes_split_from_computed(monkeypatch, tmp_path):
     """Lanes cut off by the step budget count as incomplete, not
     computed, so resume summaries cannot overstate coverage."""
     from repro.core.jobs import DONE
-    from repro.experiments import backend_jax
+    from repro.sweep import shard
 
-    real = backend_jax.simulate_lanes
+    # the backend drives the engine through the chunked stream, whose
+    # per-chunk engine entry is shard.simulate_lanes
+    real = shard.simulate_lanes
 
-    def cut_first_lane(batch, cfg, verbose=False):
-        res = real(batch, cfg, verbose=verbose)
+    def cut_first_lane(batch, cfg, **kw):
+        res = real(batch, cfg, **kw)
         res["state"] = np.array(res["state"])
         res["state"][0, -1] = 2  # pretend lane 0 never finished
         res["finished"] = bool(np.all(res["state"] == DONE))
         return res
 
-    monkeypatch.setattr(backend_jax, "simulate_lanes", cut_first_lane)
+    monkeypatch.setattr(shard, "simulate_lanes", cut_first_lane)
     spec = ExperimentSpec(**dict(TINY, seeds=1, strategies=("min",)),
                           engine="jax")
     results = run_experiment(spec, cache_dir=tmp_path,

@@ -1,0 +1,257 @@
+"""Tests for the sharded, chunked execution layer (repro.sweep.shard).
+
+The contract under test: chunking and device-sharding are *execution*
+choices, never *experiment* choices — chunked/sharded runs produce
+bit-identical cells, write the same cell-store keys, resume from the
+store after a mid-grid interruption, and none of the knobs appears in a
+spec or cell fingerprint.  Multi-device coverage forces two host devices
+in a subprocess (``XLA_FLAGS=--xla_force_host_platform_device_count=2``;
+jax fixes its device count at first backend use, so the flag cannot be
+set in-process).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import STRATEGIES, Workload
+from repro.experiments import ExperimentSpec, run_experiment
+from repro.sweep.batch import (EngineConfig, build_lanes, pad_lanes,
+                               simulate_lanes, take_lanes)
+from repro.sweep.cache import SweepCache
+from repro.sweep.shard import (ShardConfig, chunk_plan, describe_plan,
+                               simulate_lanes_chunked)
+
+TINY_SPEC = dict(workloads=("haswell",), scale=0.003, seeds=2,
+                 proportions=(0.0, 1.0), strategies=("min",), engine="jax")
+OPTS = {"window": 32, "chunk": 64}
+CFG = EngineConfig(window=16, chunk=64)
+
+LANES = [(STRATEGIES["easy"], 0.0, 0), (STRATEGIES["min"], 0.6, 0),
+         (STRATEGIES["pref"], 1.0, 1), (STRATEGIES["keeppref"], 0.6, 0)]
+
+
+def _wl(seed=0, n=20, hi=150.0):
+    rng = np.random.default_rng(seed)
+    return Workload.rigid(submit=np.sort(rng.uniform(0, hi, n)),
+                          runtime=rng.uniform(20, 120, n),
+                          nodes_req=rng.choice([1, 2, 4, 8], n))
+
+
+def _results_equal(a, b):
+    for k in a:
+        if k.startswith("_"):
+            continue
+        assert a[k] == b[k], k
+
+
+# ----------------------------------------------------------------- plan
+def test_chunk_plan_widths_and_ranges():
+    assert chunk_plan(10, 4) == (4, [(0, 4), (4, 8), (8, 10)])
+    assert chunk_plan(10, 0) == (10, [(0, 10)])  # monolithic default
+    assert chunk_plan(10, 64) == (10, [(0, 10)])  # budget > lanes clamps
+    # sharded chunks round the width up to a device multiple
+    assert chunk_plan(10, 3, n_devices=2) == (4, [(0, 4), (4, 8), (8, 10)])
+    assert chunk_plan(1, 0, n_devices=2) == (2, [(0, 1)])
+    with pytest.raises(ValueError):
+        chunk_plan(0, 1)
+    with pytest.raises(ValueError):
+        ShardConfig(chunk_lanes=-1)
+    with pytest.raises(ValueError):
+        ShardConfig(devices=-1)
+    plan = describe_plan(10, ShardConfig(chunk_lanes=3), n_devices=2)
+    assert plan == {"n_lanes": 10, "chunks": 3, "lane_width": 4,
+                    "devices": 2}
+
+
+def test_take_and_pad_lanes():
+    batch, _ = build_lanes(_wl(), 10, LANES)
+    sub = take_lanes(batch, 1, 3)
+    assert sub.n_lanes == 2 and sub.n_jobs == batch.n_jobs
+    np.testing.assert_array_equal(np.asarray(sub.submit),
+                                  np.asarray(batch.submit)[1:3])
+    np.testing.assert_array_equal(np.asarray(sub.capacity),
+                                  np.asarray(batch.capacity)[1:3])
+    padded = pad_lanes(sub, 5)
+    assert padded.n_lanes == 5
+    # padding repeats the first lane, so lane-derived statics are unchanged
+    for row in (2, 3, 4):
+        np.testing.assert_array_equal(np.asarray(padded.min_nodes)[row],
+                                      np.asarray(sub.min_nodes)[0])
+    assert pad_lanes(sub, 2) is sub
+    with pytest.raises(ValueError):
+        pad_lanes(sub, 1)
+
+
+# ------------------------------------------------- engine-level parity
+def test_chunked_bitwise_parity_with_monolithic():
+    """Every per-lane result array is bit-identical however the lane axis
+    is chunked — including chunk_lanes=1 (one lane resident at a time)
+    and a width that forces a padded final chunk."""
+    batch, _ = build_lanes(_wl(), 10, LANES)
+    mono = simulate_lanes(batch, CFG)
+    for chunk_lanes in (1, 3):
+        chunks = list(simulate_lanes_chunked(
+            batch, CFG, ShardConfig(chunk_lanes=chunk_lanes)))
+        assert [c.lo for c in chunks][0] == 0
+        assert chunks[-1].hi == batch.n_lanes
+        for c in chunks:
+            assert c.results["finished"]
+            assert c.lane_width == chunk_lanes
+            for k in ("state", "alloc", "start_t", "end_t",
+                      "expand_ops", "shrink_ops"):
+                np.testing.assert_array_equal(
+                    c.results[k], mono[k][c.lo:c.hi],
+                    err_msg=f"chunk_lanes={chunk_lanes} lanes "
+                            f"[{c.lo},{c.hi}) field {k}")
+
+
+def test_chunked_balanced_engine_bitwise_parity():
+    """The balanced (AVG) structure is the sensitive one: its level
+    bisection's iteration count follows the batch-level span_max static,
+    so chunks must inherit the full batch's statics to stay bit-equal."""
+    # heterogeneous spans so a chunk-local span_max would differ
+    lanes = [(STRATEGIES["avg"], 0.3, 0), (STRATEGIES["avg"], 0.8, 0),
+             (STRATEGIES["avg"], 1.0, 1)]
+    batch, _ = build_lanes(_wl(seed=3), 10, lanes)
+    cfg = EngineConfig(balanced=True, window=16, chunk=64)
+    mono = simulate_lanes(batch, cfg)
+    for c in simulate_lanes_chunked(batch, cfg, ShardConfig(chunk_lanes=1)):
+        for k in ("state", "alloc", "start_t", "end_t",
+                  "expand_ops", "shrink_ops"):
+            np.testing.assert_array_equal(c.results[k], mono[k][c.lo:c.hi],
+                                          err_msg=f"lane {c.lo} field {k}")
+
+
+# ------------------------------------------- backend-level parity/store
+def test_chunked_backend_same_cells_same_store_keys(tmp_path):
+    """chunk_lanes=1 and the monolithic default produce the same metrics
+    bit-for-bit, the same artifact spec_key, and the same cell-store
+    keys — execution knobs never reach a fingerprint."""
+    spec = ExperimentSpec(**TINY_SPEC)
+    mono = run_experiment(spec, cache_dir=tmp_path / "mono",
+                          backend_options=OPTS, verbose=False)["haswell"]
+    chunked = run_experiment(
+        spec, cache_dir=tmp_path / "chunked",
+        backend_options={**OPTS, "chunk_lanes": 1},
+        verbose=False)["haswell"]
+    _results_equal(mono, chunked)
+    assert mono["_meta"]["spec_key"] == chunked["_meta"]["spec_key"]
+
+    def keys(root):
+        return sorted(p.name for p in pathlib.Path(root).rglob("*.json"))
+
+    assert keys(tmp_path / "mono") == keys(tmp_path / "chunked")
+
+    info = chunked["_engine"]
+    n_cells = len(spec.cells())
+    assert info["peak_lane_width"] == 1
+    assert len(info["chunks"]) == n_cells  # one lane per chunk
+    assert all(c["wall_s"] >= 0.0 for c in info["chunks"])
+    assert sum(c["lanes"] for c in info["chunks"]) == n_cells
+
+    # a chunked re-run against the monolithic store is a pure hit: the
+    # cells mean the same thing however they were computed
+    again = run_experiment(
+        spec, cache_dir=tmp_path / "mono",
+        backend_options={**OPTS, "chunk_lanes": 2},
+        verbose=False)["haswell"]["_engine"]
+    assert again["cache_hits"] == n_cells
+    assert again["computed_cells"] == 0
+
+
+def test_execution_knobs_absent_from_fingerprints():
+    spec = ExperimentSpec(**TINY_SPEC)
+    blob = json.dumps(spec.fingerprint()) + json.dumps(
+        spec.cell_fingerprint("haswell", ("min", 1.0, 0)))
+    for knob in ("chunk_lanes", "devices", "window", "workers",
+                 "expand_backend", "max_lane_width"):
+        assert knob not in blob, knob
+
+
+def test_interrupted_chunked_run_resumes_from_store(tmp_path, monkeypatch):
+    """A kill mid-grid loses only the in-flight chunk: completed chunks
+    were already flushed, and the re-run computes just the remainder."""
+    from repro.experiments import backend_jax
+
+    spec = ExperimentSpec(**TINY_SPEC)
+    n_cells = len(spec.cells())
+    real = backend_jax.simulate_lanes_chunked
+
+    def killed_after_first_chunk(*a, **kw):
+        it = real(*a, **kw)
+        yield next(it)
+        raise KeyboardInterrupt("simulated mid-grid kill")
+
+    monkeypatch.setattr(backend_jax, "simulate_lanes_chunked",
+                        killed_after_first_chunk)
+    with pytest.raises(KeyboardInterrupt):
+        run_experiment(spec, cache_dir=tmp_path,
+                       backend_options={**OPTS, "chunk_lanes": 1},
+                       verbose=False)
+    monkeypatch.undo()
+
+    store = SweepCache(tmp_path)
+    stored = [c for c in spec.cells()
+              if store.has(spec.cell_fingerprint("haswell", c))]
+    assert len(stored) == 1  # exactly the flushed first chunk
+
+    resumed = run_experiment(spec, cache_dir=tmp_path,
+                             backend_options={**OPTS, "chunk_lanes": 1},
+                             verbose=False)["haswell"]
+    info = resumed["_engine"]
+    assert info["cache_hits"] == 1
+    assert info["computed_cells"] == n_cells - 1
+    clean = run_experiment(spec, backend_options=OPTS,
+                           verbose=False)["haswell"]
+    _results_equal(clean, resumed)
+
+
+# ------------------------------------------------- forced multi-device
+_SUBPROC = textwrap.dedent("""\
+    import json
+    import jax
+    from repro.experiments import ExperimentSpec, run_experiment
+
+    assert jax.device_count() == 2, jax.devices()
+    spec = ExperimentSpec(workloads=("haswell",), scale=0.003, seeds=2,
+                          proportions=(0.0, 1.0), strategies=("min",),
+                          engine="jax")
+    res = run_experiment(
+        spec, backend_options={"window": 32, "chunk": 64,
+                               "chunk_lanes": 2, "devices": 2},
+        verbose=False)["haswell"]
+    out = {k: v for k, v in res.items() if not k.startswith("_")}
+    out["_devices"] = res["_engine"]["devices"]
+    out["_peak_lane_width"] = res["_engine"]["peak_lane_width"]
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def test_forced_multi_device_parity(tmp_path):
+    """A 2-host-device lane-sharded run agrees with the single-device
+    monolithic run on every metric of every cell."""
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = str(src) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    sharded = json.loads(line[len("RESULT "):])
+    assert sharded.pop("_devices") == 2
+    assert sharded.pop("_peak_lane_width") == 2
+
+    ref = run_experiment(ExperimentSpec(**TINY_SPEC),
+                         backend_options=OPTS, verbose=False)["haswell"]
+    for cell_key, metrics in sharded.items():
+        for mk, v in metrics.items():
+            assert v == pytest.approx(ref[cell_key][mk], rel=1e-5,
+                                      abs=1e-3), (cell_key, mk)

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Check that every relative link in the repo's markdown docs resolves.
+
+Scans all tracked ``*.md`` files (top level, ``docs/``, and the
+subsystem READMEs under ``src/``) for inline markdown links
+``[text](target)`` and fails if a relative target does not exist on
+disk; for ``target.md#anchor`` links the anchor must match a heading's
+GitHub slug in the target file.  External (``http(s)://``, ``mailto:``)
+links are ignored — CI must not depend on the network.
+
+Run from anywhere:  python tools/check_doc_links.py
+Exit status: 0 = all links resolve, 1 = broken links (listed on stderr).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+# [text](target) — inline links only, skipping images' extra "!" is fine
+# (image targets should exist too), and ignoring code spans is handled by
+# stripping fenced blocks below.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def heading_slugs(md_path: pathlib.Path) -> set:
+    """GitHub-style slugs of every heading in ``md_path``."""
+    slugs = set()
+    text = FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for line in text.splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if not m:
+            continue
+        title = re.sub(r"[`*_]", "", m.group(1)).strip().lower()
+        slug = re.sub(r"[^\w\- ]", "", title).replace(" ", "-")
+        slugs.add(slug)
+    return slugs
+
+
+def doc_files():
+    for pattern in ("*.md", "docs/**/*.md", "src/**/*.md"):
+        yield from sorted(ROOT.glob(pattern))
+
+
+def check() -> int:
+    broken = []
+    for md in doc_files():
+        text = FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+        for target in LINK_RE.findall(text):
+            if re.match(r"[a-z][a-z0-9+.-]*:", target):  # http:, mailto:
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                # a link may (incorrectly) escape the repo root, so the
+                # error path can't assume dest is relative to it
+                try:
+                    missing = dest.relative_to(ROOT)
+                except ValueError:
+                    missing = dest
+                broken.append(f"{md.relative_to(ROOT)}: {target} "
+                              f"(missing {missing})")
+                continue
+            if anchor and dest.suffix == ".md":
+                if anchor not in heading_slugs(dest):
+                    broken.append(f"{md.relative_to(ROOT)}: {target} "
+                                  f"(no heading #{anchor})")
+    if broken:
+        print("broken doc links:", file=sys.stderr)
+        for b in broken:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    n = sum(1 for _ in doc_files())
+    print(f"doc link-check OK ({n} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())

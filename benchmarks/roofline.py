@@ -1,5 +1,7 @@
 """Roofline table renderer: reads dry-run artifacts (artifacts/dryrun-*.json)
-and prints the per-(arch x shape) three-term roofline (§Roofline).
+and prints the per-(arch x shape) three-term roofline (§Roofline), plus the
+*measured* sweep roofline (:func:`sweep_roofline`) that the benchmark
+orchestrator folds into ``artifacts/sweep-timing-{engine}.json``.
 
 CLI:  PYTHONPATH=src python -m benchmarks.roofline [--artifacts DIR]
 """
@@ -11,6 +13,48 @@ import pathlib
 from typing import Dict, List
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+# Estimated bytes the batched engine touches per (lane, window-slot, step):
+# the scan carry holds 7 per-slot state arrays (state/alloc/rem/start/end/
+# expand-ops/shrink-ops, 4 B each) that are read and written every step,
+# plus priority/walltime reads — a deliberate order-of-magnitude constant
+# (not a measurement) for the memory-side roofline denominator.
+BYTES_PER_SLOT_STEP = 64
+
+
+def sweep_roofline(engine_info: Dict) -> Dict:
+    """Achieved-throughput summary of one jax sweep's ``engine_info``.
+
+    Consumes the per-chunk records the backend leaves in
+    ``engine_info["chunks"]`` and reports achieved lane-steps/s and
+    estimated bytes touched (``BYTES_PER_SLOT_STEP`` per lane x window
+    slot x step).  Rates are computed over execute time (compile excluded
+    via the first-call split) when it is known, else over chunk wall.
+    """
+    chunks = engine_info.get("chunks") or []
+    wall = sum(c.get("wall_s", 0.0) for c in chunks)
+    execute = sum(c.get("execute_s", 0.0) for c in chunks)
+    compile_s = sum(c.get("compile_s", 0.0) for c in chunks)
+    lane_steps = sum(c.get("steps", 0) * c.get("lane_width", 0)
+                     for c in chunks)
+    slot_steps = sum(c.get("steps", 0) * c.get("lane_width", 0)
+                     * c.get("window", 0) for c in chunks)
+    denom = execute if execute > 0 else wall
+    bytes_touched = slot_steps * BYTES_PER_SLOT_STEP
+    return {
+        "chunks": len(chunks),
+        "wall_s": wall,
+        "compile_s": compile_s,
+        "execute_s": execute,
+        "lane_steps": lane_steps,
+        "slot_steps": slot_steps,
+        "bytes_touched_est": bytes_touched,
+        "achieved_lane_steps_per_s": (lane_steps / denom) if denom > 0
+        else 0.0,
+        "achieved_GB_per_s_est": (bytes_touched / denom / 1e9)
+        if denom > 0 else 0.0,
+        "bytes_per_slot_step": BYTES_PER_SLOT_STEP,
+    }
 
 
 def load_records(art_dir: pathlib.Path, mesh: str = "16x16",

@@ -34,9 +34,11 @@ from repro.experiments import (ExperimentSpec, best_improvements,
                                load_artifact_results, render_sweep_table,
                                run_experiment, write_artifact)
 from repro.experiments.cli import (add_execution_arguments,
+                                   add_observability_arguments,
                                    add_scenario_arguments,
                                    backend_options_from_args,
-                                   scenario_from_args)
+                                   configure_observability,
+                                   flush_observability, scenario_from_args)
 
 from . import figures, paper_tables, roofline
 
@@ -60,6 +62,7 @@ def main(argv=None) -> int:
                     help="[des] cell-parallel worker processes")
     add_execution_arguments(ap)
     add_scenario_arguments(ap)
+    add_observability_arguments(ap)
     ap.add_argument("--skip-sweeps", action="store_true")
     ap.add_argument("--no-reuse", action="store_true",
                     help="recompute sweeps even if artifacts exist")
@@ -70,6 +73,7 @@ def main(argv=None) -> int:
     if args.full:
         args.scale, args.seeds = 1.0, 10
 
+    configure_observability(args)
     scenario = scenario_from_args(args)
 
     t0 = time.monotonic()
@@ -160,11 +164,19 @@ def main(argv=None) -> int:
             # carries per-chunk wall-clock and the peak device-resident
             # lane width (the docs/paper-scale.md sizing inputs).
             timing_path = ARTIFACTS / f"sweep-timing-{args.engine}.json"
-            timing = {"engine": args.engine, "scale": args.scale,
+            engine_info = {n: all_results[n].get("_engine", {})
+                           for n in to_run}
+            timing = {"schema_version": 2,  # docs/paper-scale.md
+                      "engine": args.engine, "scale": args.scale,
                       "seeds": args.seeds, "batch_workloads": to_run,
                       "total_s": batch_wall,
-                      "engine_info": {n: all_results[n].get("_engine", {})
-                                      for n in to_run}}
+                      "engine_info": engine_info}
+            if args.engine == "jax" and to_run:
+                # whole-batch achieved roofline: engine stats are
+                # batch-scoped, so any one workload's _engine carries the
+                # full chunk list (see backend_jax docstring)
+                timing["roofline"] = roofline.sweep_roofline(
+                    engine_info[to_run[0]])
             timing_path.write_text(json.dumps(timing, indent=1,
                                               default=float))
             print(f"[sweep] wall-clock record -> {timing_path}")
@@ -182,6 +194,7 @@ def main(argv=None) -> int:
         roofline.main(["--artifacts", str(ARTIFACTS), "--tag", "opt"])
 
     print(f"\n[benchmarks] total {time.monotonic()-t0:,.0f}s")
+    flush_observability(args)
     return 0
 
 

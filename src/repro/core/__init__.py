@@ -9,7 +9,8 @@
 from .cluster import CLUSTERS, Cluster, EAGLE, HASWELL, KNL, THETA
 from .jobs import (CLASS_NORMAL, CLASS_ON_DEMAND, CLASS_RIGID, DONE,
                    PENDING, QUEUED, RUNNING, Workload)
-from .metrics import Window, aggregate_seeds, improvement, iqr, run_metrics
+from .metrics import (Window, aggregate_seeds, backfill_starts,
+                      improvement, iqr, run_metrics, scheduling_counters)
 from .passes import (balanced_expand, balanced_shrink, greedy_expand,
                      greedy_shrink)
 from .scenario import (JobClasses, ScenarioConfig, apply_scenario,
@@ -27,7 +28,8 @@ __all__ = [
     "CLUSTERS", "Cluster", "EAGLE", "HASWELL", "KNL", "THETA",
     "CLASS_NORMAL", "CLASS_ON_DEMAND", "CLASS_RIGID",
     "DONE", "PENDING", "QUEUED", "RUNNING", "Workload",
-    "Window", "aggregate_seeds", "improvement", "iqr", "run_metrics",
+    "Window", "aggregate_seeds", "backfill_starts", "improvement",
+    "iqr", "run_metrics", "scheduling_counters",
     "balanced_expand", "balanced_shrink", "greedy_expand", "greedy_shrink",
     "JobClasses", "ScenarioConfig", "apply_scenario", "assign_job_classes",
     "SimResult", "Simulator", "simulate",

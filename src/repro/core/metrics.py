@@ -87,6 +87,47 @@ def run_metrics(
     }
 
 
+def backfill_starts(submit: np.ndarray, start: np.ndarray) -> int:
+    """Out-of-order starts: jobs started while an earlier job still waited.
+
+    A job counts iff its start time is *strictly* below the running
+    maximum of earlier-submitted jobs' starts (never-started jobs count as
+    ``+inf``, so everything that jumps a still-waiting job is counted).
+    Under tick-quantized scheduling this is exactly "started by the EASY
+    backfill scan or a shrink-admission while an earlier arrival stayed
+    queued through that invocation" — the definition the batched engine
+    accumulates on device (``repro.sweep.batch``), which is how the two
+    engines' counters are comparable (``tests/test_obs.py``).
+    """
+    order = np.argsort(submit, kind="stable")
+    s = np.where(np.isfinite(start), start, np.inf)[order]
+    prev_max = np.maximum.accumulate(
+        np.concatenate([[-np.inf], s[:-1]]))
+    return int(np.sum(s < prev_max))
+
+
+def scheduling_counters(result: SimResult,
+                        workload: Workload) -> Dict[str, float]:
+    """Whole-run scheduler-behavior counters of a DES run.
+
+    Execution-side observability (reconfiguration churn, queue-jump
+    pressure, scheduler work) reported alongside — never inside — the
+    paper metrics.  Keys carry the ``sched_`` prefix; none of them may
+    enter a spec or cell fingerprint.  ``sched_invocations`` is
+    engine-specific by design: the DES counts in-tick fixpoint
+    invocations, the batched engine counts processed scheduling ticks
+    (it converges over subsequent ticks instead), so only the backfill/
+    shrink/expand counters are comparable across engines.
+    """
+    return {
+        "sched_backfill_starts": float(
+            backfill_starts(workload.submit, result.start)),
+        "sched_shrink_events": float(np.sum(result.shrink_ops)),
+        "sched_expand_events": float(np.sum(result.expand_ops)),
+        "sched_invocations": float(result.n_sched_calls),
+    }
+
+
 def iqr(values: Sequence[float]) -> float:
     v = np.asarray(values, dtype=np.float64)
     v = v[np.isfinite(v)]
@@ -96,11 +137,16 @@ def iqr(values: Sequence[float]) -> float:
 
 
 def aggregate_seeds(per_seed: List[Dict[str, float]]) -> Dict[str, float]:
-    """Mean and IQR over seed runs (paper: 10 seeds, IQR error bars)."""
+    """Mean and IQR over seed runs (paper: 10 seeds, IQR error bars).
+
+    Aggregates the union of keys: a cell replayed from an older store
+    entry may lack later-added observability keys (``sched_*``), and a
+    missing value must degrade that key to nan, not crash the grid.
+    """
     out: Dict[str, float] = {}
-    keys = per_seed[0].keys()
+    keys = list(dict.fromkeys(k for m in per_seed for k in m))
     for k in keys:
-        vals = [m[k] for m in per_seed]
+        vals = [m.get(k, np.nan) for m in per_seed]
         finite = [v for v in vals if np.isfinite(v)]
         out[f"{k}_mean"] = float(np.mean(finite)) if finite else np.nan
         out[f"{k}_iqr"] = iqr(vals)

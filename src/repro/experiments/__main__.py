@@ -29,7 +29,8 @@ import json
 import pathlib
 
 from .cli import (add_backend_arguments, add_spec_arguments,
-                  backend_options_from_args, spec_from_args)
+                  backend_options_from_args, configure_observability,
+                  flush_observability, spec_from_args)
 from .report import (SCENARIO_AXES, best_improvements,
                      render_scenario_table, render_sweep_table)
 from .run import run_experiment, sweep_scenario_axis, write_artifact
@@ -84,9 +85,12 @@ def main(argv=None, prog=None, epilog=None) -> int:
         ap.error("--compare-scenarios cannot be combined with "
                  "--expect-cached / --crosscheck / --require-crosscheck")
 
+    configure_observability(args)
     spec = spec_from_args(args)
     if args.compare_scenarios:
-        return compare_scenarios(spec, args)
+        rc = compare_scenarios(spec, args)
+        flush_observability(args)
+        return rc
     all_results = run_experiment(
         spec, cache_dir=args.cache_dir or None,
         backend_options=backend_options_from_args(args),
@@ -123,6 +127,12 @@ def main(argv=None, prog=None, epilog=None) -> int:
         print(f"[experiment:{tag}] FAIL: expected a 100% store hit but "
               f"computed {info['computed_cells']} cells "
               f"(+{incomplete_total} incomplete)")
+        missed = list(info.get("missed_cells", []))
+        shown = missed[:20]
+        print(f"[experiment:{tag}] missed cells ({len(missed)}): "
+              + ", ".join(shown)
+              + (f", ... +{len(missed) - len(shown)} more" if
+                 len(missed) > len(shown) else ""))
         rc = 1
     if args.require_crosscheck:
         bad = [name for name, r in all_results.items()
@@ -132,6 +142,7 @@ def main(argv=None, prog=None, epilog=None) -> int:
             print(f"[experiment:{tag}] crosscheck EXCEEDED tolerance for: "
                   f"{', '.join(bad)}")
             rc = 1
+    flush_observability(args)
     return rc
 
 

@@ -8,6 +8,15 @@ worker process and memoized there — so the parallel schedule cannot change
 results: serial and parallel runs are bit-identical, and a run interrupted
 mid-grid resumes from the cells already written to the store.
 
+Each cell's metrics carry the ``sched_*`` scheduling counters
+(:func:`repro.core.metrics.scheduling_counters`): execution-side
+observability that rides in the metric dict (and therefore the cell
+store) but never in a fingerprint.  Spans/heartbeat: serial cells are
+traced individually (``des.cell``); pool workers are separate processes
+where the default tracer is disabled — the documented limitation of
+``--trace`` with ``--workers N`` (the per-cell wall-clock is still
+recorded in ``info["cells"]`` either way).
+
 This module never imports jax.
 """
 from __future__ import annotations
@@ -17,8 +26,9 @@ import os
 import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import (get_strategy, run_metrics, simulate,
-                        transform_rigid_to_malleable)
+from repro import obs
+from repro.core import (get_strategy, run_metrics, scheduling_counters,
+                        simulate, transform_rigid_to_malleable)
 from repro.sweep.cache import SweepCache
 
 from .spec import Cell, ExperimentSpec, prepare_workload
@@ -47,12 +57,15 @@ def simulate_cell(spec: ExperimentSpec, name: str,
                                        spec.transform))
     res = simulate(wm, cl, get_strategy(strat),
                    backfill_depth=spec.scenario.backfill_depth)
-    return run_metrics(res, wm, cl, window)
+    return {**run_metrics(res, wm, cl, window),
+            **scheduling_counters(res, wm)}
 
 
 def _worker(task: Tuple[ExperimentSpec, str, Cell]):
     spec, name, cell = task
-    return (name, cell), simulate_cell(spec, name, cell)
+    t0 = time.monotonic()
+    m = simulate_cell(spec, name, cell)
+    return (name, cell), m, time.monotonic() - t0
 
 
 def run_cells(spec: ExperimentSpec,
@@ -64,21 +77,34 @@ def run_cells(spec: ExperimentSpec,
     """Run ``todo`` cells; returns (metrics by (workload, cell), info).
 
     ``options["workers"]``: 0/1 = serial in-process (default); N > 1 = a
-    process pool of N; -1 = one per CPU.  Completed cells are written to
+    process pool of N; -1 = one per CPU.  ``options["progress"]`` prints a
+    per-cell heartbeat line with an ETA.  Completed cells are written to
     ``store`` as they finish, so an interrupted run resumes.
+    ``info["cells"]`` records per-cell wall-clock in completion order —
+    the DES analogue of the jax backend's per-chunk timing, sharing the
+    timing-artifact schema (``docs/paper-scale.md``).
     """
-    workers = int((options or {}).get("workers") or 0)
+    opts = options or {}
+    workers = int(opts.get("workers") or 0)
     if workers < 0:
         workers = os.cpu_count() or 1
     t0 = time.monotonic()
     metrics: Dict[Tuple[str, Cell], Dict[str, float]] = {}
+    cell_walls: List[Dict] = []
+    heartbeat = obs.Heartbeat(len(todo), label=f"progress:{spec.engine}",
+                              unit="cell",
+                              enabled=bool(opts.get("progress")))
 
-    def record(key, m):
+    def record(key, m, wall_s):
         metrics[key] = m
+        name, (strat, prop, seed) = key
+        cell_walls.append({"workload": name, "strategy": strat,
+                           "proportion": prop, "seed": seed,
+                           "wall_s": wall_s})
         if store is not None:
             store.put(fingerprints[key], m)
+        heartbeat.tick(cells_flushed=1 if store is not None else 0)
         if verbose:
-            name, (strat, prop, seed) = key
             print(f"[experiment-des:{name}] {strat}@{int(prop * 100)}%"
                   f"/s{seed}: turnaround={m['turnaround_mean']:,.0f} "
                   f"wait={m['wait_mean']:,.0f} "
@@ -90,12 +116,17 @@ def run_cells(spec: ExperimentSpec,
                 max_workers=min(workers, len(tasks))) as pool:
             futures = [pool.submit(_worker, t) for t in tasks]
             for fut in concurrent.futures.as_completed(futures):
-                key, m = fut.result()
-                record(key, m)
+                key, m, wall_s = fut.result()
+                record(key, m, wall_s)
     else:
         for name, cell in todo:
-            record((name, cell), simulate_cell(spec, name, cell))
+            t_cell = time.monotonic()
+            with obs.span("des.cell", workload=name, strategy=cell[0],
+                          proportion=cell[1], seed=cell[2]):
+                m = simulate_cell(spec, name, cell)
+            record((name, cell), m, time.monotonic() - t_cell)
 
     info = {"sim_seconds": time.monotonic() - t0,
-            "workers": max(workers, 1), "computed_cells": len(todo)}
+            "workers": max(workers, 1), "computed_cells": len(todo),
+            "cells": cell_walls}
     return metrics, info

@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import DONE, get_strategy
 from repro.sweep.batch import (EngineConfig, build_lanes, concat_lanes,
                                simulate_lanes)  # noqa: F401 (re-export)
@@ -75,9 +76,18 @@ def run_cells(spec: ExperimentSpec,
     (:func:`repro.sweep.shard.simulate_lanes_chunked`); with the default
     plan that is one monolithic chunk, i.e. exactly the historical
     behaviour.  Completed cells are written to the store per chunk, and
-    ``info["chunks"]`` records each chunk's wall-clock and executed lane
-    width (surfaced into ``artifacts/sweep-timing-jax.json`` by
-    ``benchmarks/run.py``).
+    ``info["chunks"]`` records each chunk's wall-clock — split into
+    compile vs. execute by first-call timing, plus retrace and
+    window-escalation counts — and executed lane width (surfaced into
+    ``artifacts/sweep-timing-jax.json`` by ``benchmarks/run.py``).
+
+    Every cell's metric dict carries the device-accumulated ``sched_*``
+    scheduling counters (backfill starts, shrink/expand events, processed
+    scheduling ticks).  They are execution-plan-invariant — derived from
+    the bit-identical schedule, so chunked/sharded/monolithic runs agree
+    exactly — and execution-only: stored with the cell, never part of a
+    fingerprint.  ``options["progress"]`` prints a per-chunk heartbeat
+    line (chunks done, cells flushed, ETA).
     """
     opts = options or {}
     shard = ShardConfig(chunk_lanes=int(opts.get("chunk_lanes", 0)),
@@ -93,7 +103,9 @@ def run_cells(spec: ExperimentSpec,
     metrics: Dict[Tuple[str, Cell], Dict[str, float]] = {}
     info: Dict[str, object] = {"incomplete": [], "chunks": [],
                                "chunk_lanes": shard.chunk_lanes,
-                               "peak_lane_width": 0}
+                               "peak_lane_width": 0,
+                               "compile_s": 0.0, "execute_s": 0.0,
+                               "retraces": 0, "escalations": 0}
     for balanced, group in groups.items():
         if not group:
             continue
@@ -123,13 +135,16 @@ def run_cells(spec: ExperimentSpec,
                            expand_backend=opts.get("expand_backend",
                                                    "bisect"))
         tag = "balanced" if balanced else "greedy"
+        plan = describe_plan(big.n_lanes, shard)
         if verbose:
-            plan = describe_plan(big.n_lanes, shard)
             if plan["chunks"] > 1 or plan["devices"] > 1:
                 print(f"[experiment-jax:{'+'.join(names)}] {tag} plan: "
                       f"{plan['n_lanes']} lanes as {plan['chunks']} "
                       f"chunk(s) of width {plan['lane_width']} on "
                       f"{plan['devices']} device(s)")
+        heartbeat = obs.Heartbeat(
+            plan["chunks"], label=f"progress:{'+'.join(names)}:{tag}",
+            unit="chunk", enabled=bool(opts.get("progress")))
         steps_total, window_peak, budget_cut = 0, 0, False
         for ch in simulate_lanes_chunked(big, cfg, shard, verbose=verbose):
             res = ch.results
@@ -137,11 +152,21 @@ def run_cells(spec: ExperimentSpec,
                 res, big.submit[ch.lo:ch.hi], big.malleable[ch.lo:ch.hi],
                 (win0[ch.lo:ch.hi], win1[ch.lo:ch.hi]),
                 caps_arr[ch.lo:ch.hi])
+            # device-accumulated per-lane scheduling counters ride in the
+            # metric dicts (execution-plan-invariant; never fingerprinted)
+            shrink_ev = np.sum(res["shrink_ops"], axis=1)
+            expand_ev = np.sum(res["expand_ops"], axis=1)
+            for i, m in enumerate(per_lane):
+                m["sched_backfill_starts"] = float(res["bf_starts"][i])
+                m["sched_shrink_events"] = float(shrink_ev[i])
+                m["sched_expand_events"] = float(expand_ev[i])
+                m["sched_invocations"] = float(res["sched_steps"][i])
             # only completed lanes enter the persistent store: a lane cut
             # off by the step budget has partial metrics that must not be
             # replayed.  The flush happens before the next chunk runs, so
             # an interrupted stream resumes from the last finished chunk.
             lane_done = np.all(res["state"] == DONE, axis=1)
+            flushed = 0
             # group is workload-major, matching the per-name lane stacking
             for key, m, done in zip(group[ch.lo:ch.hi], per_lane,
                                     lane_done):
@@ -149,6 +174,7 @@ def run_cells(spec: ExperimentSpec,
                 if bool(done):
                     if store is not None:
                         store.put(fingerprints[key], m)
+                        flushed += 1
                 else:
                     info["incomplete"].append(key)
             steps_total += int(res["steps"])
@@ -159,10 +185,19 @@ def run_cells(spec: ExperimentSpec,
                 "lane_width": ch.lane_width, "devices": ch.n_devices,
                 "wall_s": ch.wall_s, "steps": int(res["steps"]),
                 "window": int(res["window"]),
+                "compile_s": float(res["compile_s"]),
+                "execute_s": float(res["execute_s"]),
+                "retraces": int(res["retraces"]),
+                "escalations": int(res["escalations"]),
             })
+            info["compile_s"] += float(res["compile_s"])
+            info["execute_s"] += float(res["execute_s"])
+            info["retraces"] += int(res["retraces"])
+            info["escalations"] += int(res["escalations"])
             info["peak_lane_width"] = max(info["peak_lane_width"],
                                           ch.lane_width)
             info["devices"] = ch.n_devices
+            heartbeat.tick(cells_flushed=flushed)
         info[f"{tag}_lanes"] = len(group)
         info[f"{tag}_steps"] = steps_total
         info[f"{tag}_window"] = window_peak

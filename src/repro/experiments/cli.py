@@ -161,10 +161,52 @@ def add_backend_arguments(ap: argparse.ArgumentParser, *,
                     help="[des] cell-parallel worker processes "
                          "(0/1 serial, -1 per CPU)")
     add_execution_arguments(ap)
+    add_observability_arguments(ap)
+
+
+def add_observability_arguments(ap: argparse.ArgumentParser) -> None:
+    """Flight-recorder flags (:mod:`repro.obs`) — pure observability,
+    results-neutral and never fingerprinted: a run with tracing on writes
+    bit-identical cells to one with tracing off (``tests/test_obs.py``)."""
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in chrome://tracing or ui.perfetto.dev); "
+                         "enables span recording pipeline-wide")
+    ap.add_argument("--trace-jsonl", default="", metavar="PATH",
+                    help="also write the spans + final counter snapshot "
+                         "as JSON-lines (grep/jq-friendly)")
+    ap.add_argument("--progress", action="store_true",
+                    help="print a heartbeat line per chunk (jax) / cell "
+                         "(des): done/total, cells flushed, ETA")
+
+
+def configure_observability(args: argparse.Namespace) -> None:
+    """Enable the process tracer when any ``--trace*`` flag asks for it."""
+    from repro import obs
+
+    if getattr(args, "trace", "") or getattr(args, "trace_jsonl", ""):
+        obs.configure(enabled=True)
+
+
+def flush_observability(args: argparse.Namespace,
+                        verbose: bool = True) -> None:
+    """Write the trace artifacts requested by the ``--trace*`` flags."""
+    from repro import obs
+
+    trace = getattr(args, "trace", "")
+    jsonl = getattr(args, "trace_jsonl", "")
+    if not (trace or jsonl):
+        return
+    obs.flush(trace_path=trace or None, jsonl_path=jsonl or None)
+    if verbose:
+        for p in (trace, jsonl):
+            if p:
+                print(f"[obs] wrote {p}")
 
 
 def backend_options_from_args(args: argparse.Namespace) -> dict:
     return {"workers": getattr(args, "workers", 0), "window": args.window,
             "chunk": args.chunk, "chunk_lanes": args.chunk_lanes,
             "devices": args.devices,
-            "expand_backend": args.expand_backend}
+            "expand_backend": args.expand_backend,
+            "progress": bool(getattr(args, "progress", False))}

@@ -27,6 +27,7 @@ import json
 import pathlib
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core import aggregate_seeds
 from repro.sweep.cache import SweepCache
 
@@ -68,22 +69,29 @@ def run_experiment(spec: ExperimentSpec, *,
                          "reference DES; it is meaningless for engine="
                          f"{spec.engine!r}")
     cells = spec.cells()
-    fingerprints = {(name, cell): spec.cell_fingerprint(name, cell)
-                    for name in spec.workloads for cell in cells}
+    with obs.span("experiment.fingerprint", engine=spec.engine,
+                  cells=len(cells) * len(spec.workloads)):
+        fingerprints = {(name, cell): spec.cell_fingerprint(name, cell)
+                        for name in spec.workloads for cell in cells}
     store = SweepCache(cache_dir) if cache_dir else None
 
     metrics: Dict[tuple, Dict[str, float]] = {}
     if store is not None:
-        for key, fp in fingerprints.items():
-            hit = store.get(fp)
-            if hit is not None:
-                metrics[key] = hit
+        with obs.span("experiment.store_read", cells=len(fingerprints)):
+            for key, fp in fingerprints.items():
+                hit = store.get(fp)
+                if hit is not None:
+                    metrics[key] = hit
 
     todo = [(name, c) for name in spec.workloads for c in cells
             if (name, c) not in metrics]
     engine_info: Dict[str, object] = {
         "engine": spec.engine, "workloads": len(spec.workloads),
         "cache_hits": len(metrics), "computed_cells": 0, "sim_seconds": 0.0,
+        # the cells a pure-store run would have to compute, in the stable
+        # "workload/strategy@pct/sN" shape --expect-cached reports on miss
+        "missed_cells": [f"{n}/{s}@{int(p * 100)}/s{sd}"
+                         for n, (s, p, sd) in todo],
     }
     if todo:
         xla_dir = xla_cache_dir or (

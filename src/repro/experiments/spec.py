@@ -32,6 +32,7 @@ import hashlib
 import json
 from typing import Dict, List, Sequence, Tuple
 
+from repro import obs
 from repro.core import CLUSTERS, Window, apply_scenario, traces
 from repro.core.cluster import Cluster
 from repro.core.jobs import Workload
@@ -159,6 +160,9 @@ def prepare_workload(spec: ExperimentSpec, name: str
     compressed arrivals get a proportionally compressed window.
     """
     cl = CLUSTERS[name]
-    w = traces.generate(name, seed=spec.trace_seed, scale=spec.scale)
-    w = apply_scenario(w, spec.scenario)
+    with obs.span("trace.generate", workload=name, scale=spec.scale,
+                  seed=spec.trace_seed):
+        w = traces.generate(name, seed=spec.trace_seed, scale=spec.scale)
+    with obs.span("scenario.apply", workload=name, jobs=int(w.n_jobs)):
+        w = apply_scenario(w, spec.scenario)
     return cl, w, Window.for_workload(w)

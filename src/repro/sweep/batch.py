@@ -56,12 +56,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.jobs import DONE, PENDING, QUEUED, RUNNING, Workload
 from repro.core.passes import PassParams, schedule_tick, start_policies
 from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
@@ -281,6 +283,14 @@ def _peek_active(state):
     return jnp.max(jnp.sum(active, axis=-1))
 
 
+# Compile keys (the full static configuration of `_chunk_fn`) already seen
+# in this process.  The first `run_chunk` call at a key traces + compiles;
+# later calls replay the jitted executable — so "first seen here" is
+# exactly "this call paid the compile" (module-level like jit's own cache,
+# so a second in-process run correctly reports zero retraces).
+_COMPILED_KEYS: set = set()
+
+
 def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
                    verbose: bool = False,
                    statics: Optional[Dict[str, int]] = None
@@ -291,7 +301,15 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
       ``state, alloc, start_t, end_t, expand_ops, shrink_ops`` (B, n);
       ``trace_t, trace_busy, trace_qlen`` (B, S) event-step timeline
       (``trace_busy[k]`` holds on ``[trace_t[k], trace_t[k+1])``);
-      ``steps, window, finished``.
+      ``bf_starts, sched_steps`` (B,) device-accumulated scheduling
+      counters (out-of-order EASY starts / processed scheduling ticks per
+      lane — invariant under chunking, sharding and window size, so they
+      may ride in cell metrics without breaking execution-plan parity);
+      ``steps, window, finished``; and execution-only observability
+      scalars ``compile_s, execute_s, retraces, escalations`` (wall-clock
+      split by whether the chunk call paid a trace+compile, the number of
+      fresh compile variants, and 2x window escalations — these describe
+      *this execution*, never the cells, and must stay out of metrics).
 
     The window adapts per chunk: before each chunk the largest active set
     is peeked and ``W`` escalates (2x, recompiling once per size — cached)
@@ -339,17 +357,26 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     )
     k = jnp.full((B,), -1, jnp.int32)  # last processed tick index
     retrig = jnp.zeros((B,), bool)
+    # device-side scheduling counters, accumulated across chunks
+    bf = jnp.zeros((B,), jnp.int32)      # out-of-order (backfill) starts
+    nact = jnp.zeros((B,), jnp.int32)    # processed scheduling ticks
 
     traces: List[Tuple[np.ndarray, ...]] = []
     steps = 0
     w_peak = W
     low_streak = 0
+    escalations = 0
+    retraces = 0
+    compile_s = 0.0
+    execute_s = 0.0
     max_steps = cfg.max_steps_factor * n + 2048
     while steps < max_steps:
         n_active = int(_peek_active(full["state"]))
         while n_active + cfg.reserve_slack > W and W < n:
             W = min(2 * W, n)
             low_streak = 0
+            escalations += 1
+            obs.counter("sweep.escalations")
             if verbose:
                 print(f"[sweep.batch] active={n_active} -> window W={W}")
         if W > W_min and n_active + cfg.reserve_slack <= W // 2:
@@ -360,11 +387,30 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
             low_streak = 0
         w_peak = max(w_peak, W)
 
+        ckey = (cfg, n, B, W, prio_lo, prio_hi, span_max, with_classes,
+                min_depth < W)
+        first = ckey not in _COMPILED_KEYS
+        if first:
+            _COMPILED_KEYS.add(ckey)
+            retraces += 1
+            obs.counter("sweep.retraces")
         k_before = np.asarray(k)
-        full, k, retrig, ys, all_done = fn_for(W)(batch, full, k, retrig)
-        traces.append(tuple(np.asarray(y) for y in ys))
+        t_call = time.monotonic()
+        with obs.span("sweep.compile" if first else "sweep.execute",
+                      window=W, lanes=B, scan_steps=cfg.chunk):
+            full, k, retrig, bf, nact, ys, all_done = fn_for(W)(
+                batch, full, k, retrig, bf, nact)
+            # host conversion blocks on the device work, so the span (and
+            # the compile/execute wall split) covers the real cost
+            traces.append(tuple(np.asarray(y) for y in ys))
+            done_now = bool(all_done)
+        dt_call = time.monotonic() - t_call
+        if first:
+            compile_s += dt_call
+        else:
+            execute_s += dt_call
         steps += cfg.chunk
-        if bool(all_done):
+        if done_now:
             break
         if np.array_equal(k_before, np.asarray(k)):
             # nothing advanced: every lane is frozen waiting for arrivals
@@ -374,14 +420,22 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
                     "engine stalled with the window at the full job count")
             W = min(2 * W, n)
             low_streak = 0
+            escalations += 1
+            obs.counter("sweep.escalations")
 
     out = {kk: np.asarray(v) for kk, v in full.items()}
     out["trace_t"] = np.concatenate([t for t, _, _ in traces], axis=1)
     out["trace_busy"] = np.concatenate([b for _, b, _ in traces], axis=1)
     out["trace_qlen"] = np.concatenate([q for _, _, q in traces], axis=1)
+    out["bf_starts"] = np.asarray(bf)
+    out["sched_steps"] = np.asarray(nact)
     out["steps"] = steps
     out["window"] = w_peak
     out["finished"] = bool(np.all(out["state"] == DONE))
+    out["compile_s"] = compile_s
+    out["execute_s"] = execute_s
+    out["retraces"] = retraces
+    out["escalations"] = escalations
     return out
 
 
@@ -404,7 +458,7 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
 
     def step(bj, capacity, tick, depth, arrival_limit, carry, _):
         (bstate, balloc, brem, bstart, bend, beops, bsops,
-         k, retrig, frozen) = carry
+         k, retrig, frozen, bf, nact) = carry
         t = k.astype(jnp.float32) * tick
         running = bstate == RUNNING
         alloc_f = jnp.maximum(balloc.astype(jnp.float32), 1.0)
@@ -465,6 +519,20 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         beops = beops + (still & (d > 0)).astype(jnp.int32)
         bsops = bsops + (still & (d < 0)).astype(jnp.int32)
 
+        # scheduling counters (buffer slots are in FCFS submit-rank order,
+        # so "an earlier job is still queued after the pass" is an
+        # exclusive prefix count).  A start with an earlier job left
+        # waiting is exactly an out-of-order (EASY backfill / shrink-
+        # admitted) start — the tick-quantized equivalent of the DES's
+        # post-hoc rule (core.metrics.backfill_starts), so the counters
+        # agree across engines and are execution-plan-invariant.
+        started_now = (state0 == QUEUED) & (bstate == RUNNING)
+        qd = (bstate == QUEUED).astype(jnp.int32)
+        earlier_q = jnp.cumsum(qd, axis=-1) - qd
+        bf = bf + jnp.sum(started_now & (earlier_q > 0),
+                          axis=-1).astype(jnp.int32)
+        nact = nact + act.astype(jnp.int32)
+
         busy = jnp.sum(jnp.where(bstate == RUNNING, balloc, 0), axis=-1)
         qlen = jnp.sum((bstate == QUEUED).astype(jnp.int32), axis=-1)
         # rerun next tick while a pass changed state and jobs stayed queued
@@ -472,11 +540,11 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         retrig = changed & (qlen > 0)
         frozen = frozen | newly_frozen
         carry = (bstate, balloc, brem, bstart, bend, beops, bsops,
-                 k_next, retrig, frozen)
+                 k_next, retrig, frozen, bf, nact)
         return carry, (t_next, busy.astype(jnp.int32), qlen)
 
     @jax.jit
-    def run_chunk(batch, full, k, retrig):
+    def run_chunk(batch, full, k, retrig, bf, nact):
         state = full["state"]
         active = (state == QUEUED) | (state == RUNNING)
         n_active = jnp.sum(active, axis=-1)
@@ -531,14 +599,14 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             g2(full["start_t"], jnp.float32(jnp.nan)),
             g2(full["end_t"], jnp.float32(jnp.nan)),
             g2(full["expand_ops"], 0), g2(full["shrink_ops"], 0),
-            k, retrig, jnp.zeros((B,), bool),
+            k, retrig, jnp.zeros((B,), bool), bf, nact,
         )
         carry, ys = jax.lax.scan(
             lambda c, x: step(bj, batch.capacity, batch.tick,
                               batch.backfill_depth, arrival_limit, c, x),
             carry, None, length=K)
         (bstate, balloc, brem, bstart, bend, beops, bsops,
-         k, retrig, _frozen) = carry
+         k, retrig, _frozen, bf, nact) = carry
 
         def sc(a, buf):  # idx == n rows are dropped (out of bounds)
             return a.at[rows, idx].set(buf)
@@ -554,6 +622,6 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         )
         all_done = jnp.all(full["state"] == DONE)
         ts, busy, qlen = ys
-        return full, k, retrig, (ts.T, busy.T, qlen.T), all_done
+        return full, k, retrig, bf, nact, (ts.T, busy.T, qlen.T), all_done
 
     return run_chunk

@@ -37,6 +37,7 @@ import json
 import pathlib
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core.scenario import ScenarioConfig
 from repro.core.speedup import TransformConfig
 
@@ -108,16 +109,20 @@ class SweepCache:
         path = self._path(self.key(fingerprint))
         if not path.exists():
             self.misses += 1
+            obs.counter("store.miss")
             return None
         try:
             entry = json.loads(path.read_text())
         except (OSError, json.JSONDecodeError):
             self.misses += 1
+            obs.counter("store.miss")
             return None
         self.hits += 1
+        obs.counter("store.hit")
         return entry["metrics"]
 
     def put(self, fingerprint: Dict, metrics: Dict[str, float]) -> None:
+        obs.counter("store.put")
         path = self._path(self.key(fingerprint))
         path.parent.mkdir(parents=True, exist_ok=True)
         tmp = path.with_suffix(".tmp")

@@ -41,6 +41,7 @@ from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.jobs import DONE
 
 from .batch import (BatchedLanes, EngineConfig, lane_statics, pad_lanes,
@@ -170,7 +171,12 @@ def simulate_lanes_chunked(
             print(f"[sweep.shard] lanes [{lo}, {hi}) of {batch.n_lanes} "
                   f"at width {width} on {len(devices)} device(s)")
         t0 = time.monotonic()
-        res = simulate_lanes(sub, cfg, verbose=verbose, statics=statics)
+        # the chunk span wraps the whole simulate_lanes call; the engine
+        # emits nested sweep.compile / sweep.execute spans per window
+        # chunk, so a trace shows the compile-vs-execute split per chunk
+        with obs.span("sweep.chunk", lo=lo, hi=hi, width=width,
+                      devices=len(devices)):
+            res = simulate_lanes(sub, cfg, verbose=verbose, statics=statics)
         wall = time.monotonic() - t0
         m = hi - lo
         out = {k: (v[:m] if isinstance(v, np.ndarray) and v.ndim >= 1

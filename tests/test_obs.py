@@ -1,0 +1,323 @@
+"""Tests for the flight recorder (repro.obs) and its pipeline wiring.
+
+Covers the span tracer (nesting, thread-safety, Chrome trace-event
+validity), the counters registry, heartbeat ETA math, the guarantee that
+observability never leaks into spec/cell fingerprints or results
+(tracing-on == tracing-off bit-identity), the perf-regression gate
+(tools/check_perf.py), and cross-engine agreement of the scheduling
+counters (device-accumulated jax vs post-hoc DES).
+"""
+import importlib.util
+import io
+import json
+import pathlib
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.metrics import aggregate_seeds, backfill_starts
+from repro.experiments import ExperimentSpec, run_experiment
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+TINY = dict(workloads=("haswell",), scale=0.003, seeds=2,
+            proportions=(0.0, 1.0), strategies=("min", "avg"))
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    """Every test starts and ends with the disabled default tracer."""
+    tracer = obs.get_tracer()
+    tracer.reset()
+    obs.configure(enabled=False)
+    yield tracer
+    tracer.reset()
+    obs.configure(enabled=False)
+
+
+# ----------------------------------------------------------------------
+# span tracer
+def test_disabled_tracer_records_nothing():
+    with obs.span("outer"):
+        obs.counter("hits")
+    t = obs.get_tracer()
+    assert t.events() == []
+    assert t.counters.snapshot() == {"counters": {}, "gauges": {}}
+
+
+def test_disabled_span_is_shared_noop_singleton():
+    # the hot-path contract: no allocation per disabled span
+    assert obs.span("a") is obs.span("b")
+
+
+def test_span_nesting_records_parents():
+    obs.configure(enabled=True)
+    with obs.span("outer"):
+        with obs.span("inner"):
+            pass
+    evs = obs.get_tracer().events()
+    # inner exits (and records) first
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["inner"]["args"]["parent"] == "outer"
+    assert by_name["outer"]["args"]["parent"] is None
+    assert by_name["outer"]["dur"] >= by_name["inner"]["dur"]
+
+
+def test_span_thread_safety():
+    obs.configure(enabled=True)
+    n_threads, n_spans = 8, 50
+    errors = []
+
+    def work(tid):
+        try:
+            for i in range(n_spans):
+                with obs.span("outer", thread=tid):
+                    with obs.span("inner", i=i):
+                        obs.counter("work")
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    evs = obs.get_tracer().events()
+    assert len(evs) == n_threads * n_spans * 2
+    # nesting is tracked per thread: every inner's parent is outer
+    inner = [e for e in evs if e["name"] == "inner"]
+    assert all(e["args"]["parent"] == "outer" for e in inner)
+    assert obs.get_tracer().counters.get("work") == n_threads * n_spans
+
+
+def test_chrome_trace_event_validity(tmp_path):
+    obs.configure(enabled=True)
+    with obs.span("a", detail=1):
+        with obs.span("b"):
+            pass
+    trace = tmp_path / "trace.json"
+    jsonl = tmp_path / "trace.jsonl"
+    obs.flush(trace_path=trace, jsonl_path=jsonl)
+
+    loaded = json.loads(trace.read_text())
+    assert isinstance(loaded, list) and loaded
+    for ev in loaded:
+        assert ev["ph"] in ("B", "E", "X")
+        assert isinstance(ev["name"], str)
+        for k in ("ts", "dur"):
+            assert isinstance(ev[k], (int, float)) and ev[k] >= 0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+
+    lines = [json.loads(line) for line in jsonl.read_text().splitlines()]
+    assert [line["kind"] for line in lines] == ["span", "span", "counters"]
+
+
+def test_counters_and_gauges():
+    obs.configure(enabled=True)
+    obs.counter("hits")
+    obs.counter("hits", 2)
+    obs.gauge("depth", 7.0)
+    snap = obs.get_tracer().counters.snapshot()
+    assert snap["counters"]["hits"] == 3
+    assert snap["gauges"]["depth"] == 7.0
+    obs.get_tracer().reset()
+    assert obs.get_tracer().counters.snapshot() == {"counters": {},
+                                                    "gauges": {}}
+
+
+# ----------------------------------------------------------------------
+# heartbeat
+def test_eta_math():
+    assert np.isnan(obs.eta_seconds(0, 10, 5.0))
+    assert obs.eta_seconds(2, 10, 20.0) == pytest.approx(80.0)
+    assert obs.eta_seconds(10, 10, 20.0) == 0.0
+    assert obs.format_duration(float("nan")) == "--"
+    assert obs.format_duration(12) == "12s"
+    assert obs.format_duration(247) == "4m07s"
+    assert obs.format_duration(3720) == "1h02m"
+
+
+def test_heartbeat_lines_and_eta():
+    now = [0.0]
+    out = io.StringIO()
+    hb = obs.Heartbeat(4, label="test", unit="chunk", enabled=True,
+                       stream=out, clock=lambda: now[0])
+    now[0] = 10.0
+    hb.tick(cells_flushed=3)
+    now[0] = 20.0
+    hb.tick(cells_flushed=2)
+    lines = out.getvalue().splitlines()
+    assert len(lines) == 2
+    assert "chunk 1/4" in lines[0] and "eta 30s" in lines[0]
+    assert "chunk 2/4" in lines[1] and "cells 5" in lines[1]
+    assert "eta 20s" in lines[1]
+
+
+def test_heartbeat_disabled_prints_nothing():
+    out = io.StringIO()
+    hb = obs.Heartbeat(4, enabled=False, stream=out)
+    hb.tick()
+    assert out.getvalue() == ""
+
+
+# ----------------------------------------------------------------------
+# observability never leaks into identity or results
+def test_fingerprints_identical_with_tracing_on_and_off():
+    spec = ExperimentSpec(**TINY)
+    cells = spec.cells()
+    off = {c: spec.cell_fingerprint("haswell", c) for c in cells}
+    obs.configure(enabled=True)
+    with obs.span("outer"):
+        on = {c: spec.cell_fingerprint("haswell", c) for c in cells}
+    assert on == off
+    assert spec.key() == ExperimentSpec(**TINY).key()
+    # scheduling counters are execution-side: never part of the identity
+    assert "sched" not in json.dumps(next(iter(off.values())))
+
+
+def test_des_results_identical_with_tracing_on_and_off():
+    spec = ExperimentSpec(**TINY, engine="des")
+    off = run_experiment(spec, verbose=False)
+    obs.configure(enabled=True)
+    on = run_experiment(spec, verbose=False)
+    a, b = off["haswell"], on["haswell"]
+    for label in a:
+        if label.startswith("_"):
+            continue
+        assert a[label] == b[label], label
+    # and the run actually traced something
+    assert any(e["name"] == "des.cell" for e in obs.get_tracer().events())
+
+
+def test_cell_metrics_carry_sched_counters():
+    spec = ExperimentSpec(**TINY, engine="des")
+    res = run_experiment(spec, verbose=False)["haswell"]
+    for k in ("sched_backfill_starts", "sched_shrink_events",
+              "sched_expand_events", "sched_invocations"):
+        assert k in res["rigid"]
+        assert f"{k}_mean" in res["min@100"]
+
+
+def test_aggregate_seeds_tolerates_missing_sched_keys():
+    # a cell replayed from an older store lacks the sched_ keys: the
+    # aggregate must degrade that key to nan, not KeyError
+    old = {"wait_mean": 1.0}
+    new = {"wait_mean": 2.0, "sched_backfill_starts": 5.0}
+    agg = aggregate_seeds([old, new])
+    assert agg["wait_mean_mean"] == 1.5
+    assert agg["sched_backfill_starts_mean"] == 5.0
+
+
+# ----------------------------------------------------------------------
+# backfill counter: definition + cross-engine agreement
+def test_backfill_starts_definition():
+    submit = np.array([0.0, 1.0, 2.0])
+    # in-order starts: nothing jumped
+    assert backfill_starts(submit, np.array([0.0, 5.0, 6.0])) == 0
+    # job 2 starts while job 1 still waits
+    assert backfill_starts(submit, np.array([0.0, 5.0, 3.0])) == 1
+    # a never-started earlier job counts as +inf: both later jobs jumped it
+    assert backfill_starts(submit, np.array([np.inf, 5.0, 3.0])) == 2
+    # simultaneous starts are not jumps (strict <)
+    assert backfill_starts(submit, np.array([0.0, 3.0, 3.0])) == 0
+
+
+def test_scheduling_counter_parity_jax_vs_des():
+    """Device-accumulated counters track the DES post-hoc definition.
+
+    The engines' schedules are tolerance-close, not bit-identical (see
+    CROSSCHECK_TOLERANCES), so the counters agree to a relative
+    tolerance; the grid is chosen so backfill and reconfiguration are
+    both nonzero (scale 0.05 is where haswell's queue first backs up).
+    """
+    base = dict(workloads=("haswell",), scale=0.05, seeds=1,
+                proportions=(0.0, 0.5), strategies=("min",))
+    jx = run_experiment(ExperimentSpec(**base, engine="jax"),
+                        backend_options={"window": 0, "chunk": 160},
+                        verbose=False)["haswell"]
+    ds = run_experiment(ExperimentSpec(**base, engine="des"),
+                        verbose=False)["haswell"]
+
+    def val(res, label, key):
+        r = res[label]
+        return r.get(f"{key}_mean", r.get(key))
+
+    # the rigid baseline backfills heavily at this scale
+    assert val(ds, "rigid", "sched_backfill_starts") > 100
+    assert val(ds, "min@50", "sched_shrink_events") > 100
+    for label in ("rigid", "min@50"):
+        for key in ("sched_backfill_starts", "sched_shrink_events",
+                    "sched_expand_events"):
+            a, b = val(jx, label, key), val(ds, label, key)
+            assert a == pytest.approx(b, rel=0.15, abs=5.0), (label, key)
+
+
+# ----------------------------------------------------------------------
+# perf-regression gate
+def _check_perf():
+    spec = importlib.util.spec_from_file_location(
+        "check_perf", REPO / "tools" / "check_perf.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _timing(tmp_path, name, total_s, **over):
+    rec = {"schema_version": 2, "engine": "jax", "scale": 0.05,
+           "seeds": 4, "batch_workloads": ["haswell"],
+           "total_s": total_s,
+           "roofline": {"compile_s": 10.0, "execute_s": total_s - 10.0,
+                        "achieved_lane_steps_per_s": 1000.0}}
+    rec.update(over)
+    p = tmp_path / name
+    p.write_text(json.dumps(rec))
+    return p
+
+
+def test_check_perf_pass_fail_tolerance(tmp_path):
+    cp = _check_perf()
+    base = _timing(tmp_path, "timing-base.json", 100.0)
+    baseline = tmp_path / "BENCH.json"
+    assert cp.main(["--timing", str(base), "--baseline", str(baseline),
+                    "--write-baseline"]) == 0
+    assert baseline.exists()
+
+    ok = _timing(tmp_path, "timing-ok.json", 140.0)
+    slow = _timing(tmp_path, "timing-slow.json", 200.0)
+    very_slow = _timing(tmp_path, "timing-vslow.json", 400.0)
+    argv = ["--baseline", str(baseline), "--tolerance", "1.5",
+            "--hard-ratio", "3.0"]
+    assert cp.main(["--timing", str(ok), *argv]) == 0
+    assert cp.main(["--timing", str(slow), *argv]) == 1
+    # --warn-only downgrades a tolerance breach ...
+    assert cp.main(["--timing", str(slow), *argv, "--warn-only"]) == 0
+    # ... but never a hard-ratio breach
+    assert cp.main(["--timing", str(very_slow), *argv,
+                    "--warn-only"]) == 1
+    # a wider tolerance passes the same record
+    assert cp.main(["--timing", str(slow), "--baseline", str(baseline),
+                    "--tolerance", "2.5"]) == 0
+
+
+def test_check_perf_grid_mismatch(tmp_path):
+    cp = _check_perf()
+    base = _timing(tmp_path, "timing-base.json", 100.0)
+    baseline = tmp_path / "BENCH.json"
+    cp.main(["--timing", str(base), "--baseline", str(baseline),
+             "--write-baseline"])
+    other = _timing(tmp_path, "timing-other.json", 100.0, scale=0.2)
+    assert cp.main(["--timing", str(other), "--baseline",
+                    str(baseline)]) == 2
+
+
+def test_committed_baseline_matches_its_own_grid():
+    """BENCH_sweep.json must stay a valid baseline for the CI grid."""
+    baseline = REPO / "BENCH_sweep.json"
+    rec = json.loads(baseline.read_text())
+    assert rec["engine"] == "jax"
+    assert rec["batch_workloads"] == ["haswell"]
+    assert rec["total_s"] > 0

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: compare a sweep timing artifact to its baseline.
+
+Reads the ``artifacts/sweep-timing-{engine}.json`` record that
+``benchmarks/run.py`` writes after every sweep batch and compares its
+wall-clock against a committed baseline (``BENCH_sweep.json`` at the repo
+root, written with ``--write-baseline`` on a reference box).  Stdlib-only
+on purpose: CI calls it without PYTHONPATH or any repro import.
+
+Comparison contract:
+
+* The baseline and the timing record must describe the **same grid**
+  (engine, scale, seeds, workload set) — anything else exits 2
+  ("mismatch"), because a ratio across different grids is meaningless.
+* ``total_s`` beyond ``baseline * --tolerance`` is a **regression**
+  (exit 1).  ``--warn-only`` downgrades it to a warning (exit 0) for
+  noisy shared runners — except beyond ``baseline * --hard-ratio``
+  (default 3x), which always fails: no shared-runner jitter explains a
+  3x slowdown, only a real regression (or a broken baseline) does.
+* The compile/execute split (jax engine) is reported alongside so a
+  regression can be attributed: a compile_s jump is a retrace leak, an
+  execute_s jump is an engine slowdown.
+
+Exit codes: 0 pass/warn, 1 regression, 2 grid mismatch or unusable file.
+
+Examples::
+
+  python tools/check_perf.py --timing artifacts/sweep-timing-jax.json
+  python tools/check_perf.py --timing artifacts/sweep-timing-jax.json \
+      --warn-only                      # CI shared-runner mode
+  python tools/check_perf.py --timing artifacts/sweep-timing-jax.json \
+      --write-baseline                 # refresh BENCH_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_BASELINE = REPO_ROOT / "BENCH_sweep.json"
+
+# the fields that must agree for two records to be rate-comparable
+GRID_KEYS = ("engine", "scale", "seeds", "batch_workloads")
+
+
+def load_record(path: pathlib.Path) -> dict:
+    try:
+        rec = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"[check_perf] cannot read {path}: {e}")
+    if not isinstance(rec, dict) or "total_s" not in rec:
+        raise SystemExit(f"[check_perf] {path} is not a sweep timing "
+                         "record (no total_s)")
+    return rec
+
+
+def grid_of(rec: dict) -> dict:
+    g = {k: rec.get(k) for k in GRID_KEYS}
+    if isinstance(g.get("batch_workloads"), list):
+        g["batch_workloads"] = sorted(g["batch_workloads"])
+    return g
+
+
+def baseline_from(rec: dict) -> dict:
+    """The committed-baseline subset of a timing record."""
+    out = {"schema_version": rec.get("schema_version", 1),
+           **grid_of(rec), "total_s": float(rec["total_s"])}
+    roof = rec.get("roofline")
+    if isinstance(roof, dict):
+        out["compile_s"] = roof.get("compile_s")
+        out["execute_s"] = roof.get("execute_s")
+        out["achieved_lane_steps_per_s"] = roof.get(
+            "achieved_lane_steps_per_s")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--timing", required=True,
+                    help="sweep timing record to check "
+                         "(artifacts/sweep-timing-{engine}.json)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baseline (default: BENCH_sweep.json "
+                         "at the repo root)")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="fail when total_s > baseline * tolerance "
+                         "(default 1.5)")
+    ap.add_argument("--hard-ratio", type=float, default=3.0,
+                    help="always fail beyond this ratio, even with "
+                         "--warn-only (default 3.0)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="downgrade a tolerance breach to a warning "
+                         "(shared CI runners); the hard ratio still fails")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="(re)write the baseline from --timing and exit")
+    args = ap.parse_args(argv)
+    if args.tolerance <= 1.0 or args.hard_ratio < args.tolerance:
+        ap.error("need --tolerance > 1.0 and --hard-ratio >= --tolerance")
+
+    timing = load_record(pathlib.Path(args.timing))
+    baseline_path = pathlib.Path(args.baseline)
+
+    if args.write_baseline:
+        baseline_path.write_text(
+            json.dumps(baseline_from(timing), indent=1) + "\n")
+        print(f"[check_perf] wrote baseline {baseline_path} "
+              f"(total_s={timing['total_s']:.1f})")
+        return 0
+
+    baseline = load_record(baseline_path)
+    if grid_of(timing) != grid_of(baseline):
+        print(f"[check_perf] MISMATCH: timing grid {grid_of(timing)} != "
+              f"baseline grid {grid_of(baseline)}; refusing to compare "
+              "(refresh with --write-baseline on the reference box)")
+        return 2
+
+    base_s = float(baseline["total_s"])
+    got_s = float(timing["total_s"])
+    ratio = got_s / base_s if base_s > 0 else float("inf")
+    roof = timing.get("roofline") or {}
+    split = (f" (compile {roof['compile_s']:.1f}s / "
+             f"execute {roof['execute_s']:.1f}s)"
+             if "compile_s" in roof and "execute_s" in roof else "")
+    print(f"[check_perf] total_s {got_s:.1f} vs baseline {base_s:.1f} "
+          f"-> ratio {ratio:.2f} (tolerance {args.tolerance:.2f}, "
+          f"hard {args.hard_ratio:.2f}){split}")
+
+    if ratio > args.hard_ratio:
+        print(f"[check_perf] FAIL: {ratio:.2f}x exceeds the hard ratio "
+              f"{args.hard_ratio:.2f}x — regression (or stale baseline)")
+        return 1
+    if ratio > args.tolerance:
+        if args.warn_only:
+            print(f"[check_perf] WARN: {ratio:.2f}x exceeds tolerance "
+                  f"{args.tolerance:.2f}x (ignored: --warn-only)")
+            return 0
+        print(f"[check_perf] FAIL: {ratio:.2f}x exceeds tolerance "
+              f"{args.tolerance:.2f}x")
+        return 1
+    print("[check_perf] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

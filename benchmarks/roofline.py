@@ -39,6 +39,8 @@ def sweep_roofline(engine_info: Dict) -> Dict:
                      for c in chunks)
     slot_steps = sum(c.get("steps", 0) * c.get("lane_width", 0)
                      * c.get("window", 0) for c in chunks)
+    sched_steps = sum(c.get("sched_steps", 0) for c in chunks)
+    compressed = sum(c.get("compressed_events", 0) for c in chunks)
     denom = execute if execute > 0 else wall
     bytes_touched = slot_steps * BYTES_PER_SLOT_STEP
     return {
@@ -54,6 +56,17 @@ def sweep_roofline(engine_info: Dict) -> Dict:
         "achieved_GB_per_s_est": (bytes_touched / denom / 1e9)
         if denom > 0 else 0.0,
         "bytes_per_slot_step": BYTES_PER_SLOT_STEP,
+        # compile-budget counters (see docs/observability.md): events
+        # retired beyond the first of each scan step (compression), the
+        # resulting events-per-scan-step ratio, and the trace/warm-up/
+        # escalation totals that explain where compile_s went.
+        "sched_steps": sched_steps,
+        "compressed_events": compressed,
+        "event_compression": ((sched_steps + compressed) / sched_steps)
+        if sched_steps > 0 else 1.0,
+        "retraces": sum(c.get("retraces", 0) for c in chunks),
+        "escalations": sum(c.get("escalations", 0) for c in chunks),
+        "warm_hits": sum(c.get("warm_hits", 0) for c in chunks),
     }
 
 

@@ -28,6 +28,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import shutil
 import time
 
 from repro.experiments import (ExperimentSpec, best_improvements,
@@ -69,6 +70,13 @@ def main(argv=None) -> int:
     ap.add_argument("--only-cached", action="store_true",
                     help="render sweeps only from existing artifacts "
                          "(skip, rather than recompute, missing ones)")
+    ap.add_argument("--cold-xla-cache", action="store_true",
+                    help="clear artifacts/xla_cache before the sweep so "
+                         "compile_s measures a genuinely cold run")
+    ap.add_argument("--timing-tag", default="",
+                    help="suffix for the wall-clock record "
+                         "(sweep-timing-{engine}[-TAG].json) so a warm "
+                         "rerun does not overwrite the cold record")
     args = ap.parse_args(argv)
     if args.full:
         args.scale, args.seeds = 1.0, 10
@@ -123,6 +131,14 @@ def main(argv=None) -> int:
             else:
                 to_run.append(name)
 
+        # classify the run for the perf gate *before* the sweep touches
+        # the cache: cold = no persisted XLA compilations available
+        xla_dir = ARTIFACTS / "xla_cache"
+        if args.cold_xla_cache and xla_dir.exists():
+            shutil.rmtree(xla_dir)
+        xla_cache_state = ("warm" if xla_dir.exists()
+                          and any(xla_dir.iterdir()) else "cold")
+
         batch_wall = None
         if to_run:
             run_spec = ExperimentSpec(
@@ -163,13 +179,15 @@ def main(argv=None) -> int:
             # only the batch total is real; the jax engine_info also
             # carries per-chunk wall-clock and the peak device-resident
             # lane width (the docs/paper-scale.md sizing inputs).
-            timing_path = ARTIFACTS / f"sweep-timing-{args.engine}.json"
+            tag = f"-{args.timing_tag}" if args.timing_tag else ""
+            timing_path = ARTIFACTS / f"sweep-timing-{args.engine}{tag}.json"
             engine_info = {n: all_results[n].get("_engine", {})
                            for n in to_run}
             timing = {"schema_version": 2,  # docs/paper-scale.md
                       "engine": args.engine, "scale": args.scale,
                       "seeds": args.seeds, "batch_workloads": to_run,
                       "total_s": batch_wall,
+                      "xla_cache_state": xla_cache_state,
                       "engine_info": engine_info}
             if args.engine == "jax" and to_run:
                 # whole-batch achieved roofline: engine stats are

@@ -467,6 +467,18 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
     """
     import jax
     jnp = _jnp()
+    if (expand_backend in ("fused", "fused-interpret") and not balanced
+            and not with_classes):
+        # the whole greedy/class-free pass as one VMEM-resident Pallas
+        # kernel (repro.kernels.schedule_tick); balanced / class lanes
+        # keep the reference pass below
+        from repro.kernels.schedule_tick import fused_schedule_tick
+        return fused_schedule_tick(
+            p, state, alloc, remaining, start_t,
+            jnp.broadcast_to(act, state.shape), capacity, t_now,
+            fill_rounds=fill_rounds, prio_lo=prio_lo, prio_hi=prio_hi,
+            shadow_iters=shadow_iters, backfill_depth=backfill_depth,
+            interpret=expand_backend == "fused-interpret")
     INF = jnp.float32(jnp.inf)
     level_iters = int(math.ceil(math.log2(span_max + 2))) + 1
     od = p.on_demand if with_classes else None

@@ -28,10 +28,13 @@ data that bounds the engine's EASY scan itself
 the spec's depth both keys the cell store *and* changes the schedule.
 
 Backend options (results-neutral tuning, not part of the spec):
-``window`` (active-set slots, 0 = auto), ``chunk`` (scan steps between
-compactions), ``chunk_lanes`` (max device-resident lanes, 0 = whole
-batch), ``devices`` (lane shards, 0 = all local devices),
-``expand_backend`` (``bisect`` | ``pallas`` | ``pallas-interpret``).
+``window`` (active-set ladder floor, 0 = statics-predicted start),
+``chunk`` (scan steps between compactions), ``chunk_lanes`` (max
+device-resident lanes, 0 = whole batch), ``devices`` (lane shards, 0 =
+all local devices), ``events`` (per-lane events retired per scan step,
+event compression), ``aot_warmup`` (background ladder pre-compilation),
+``expand_backend`` (``bisect`` | ``pallas`` | ``pallas-interpret`` |
+``fused`` | ``fused-interpret``).
 """
 from __future__ import annotations
 
@@ -105,7 +108,9 @@ def run_cells(spec: ExperimentSpec,
                                "chunk_lanes": shard.chunk_lanes,
                                "peak_lane_width": 0,
                                "compile_s": 0.0, "execute_s": 0.0,
-                               "retraces": 0, "escalations": 0}
+                               "retraces": 0, "escalations": 0,
+                               "warm_hits": 0, "compressed_events": 0,
+                               "sched_steps": 0}
     for balanced, group in groups.items():
         if not group:
             continue
@@ -133,7 +138,9 @@ def run_cells(spec: ExperimentSpec,
                            max_steps_factor=int(
                                opts.get("max_steps_factor", 16)),
                            expand_backend=opts.get("expand_backend",
-                                                   "bisect"))
+                                                   "bisect"),
+                           events=int(opts.get("events", 4)),
+                           aot_warmup=bool(opts.get("aot_warmup", True)))
         tag = "balanced" if balanced else "greedy"
         plan = describe_plan(big.n_lanes, shard)
         if verbose:
@@ -189,11 +196,17 @@ def run_cells(spec: ExperimentSpec,
                 "execute_s": float(res["execute_s"]),
                 "retraces": int(res["retraces"]),
                 "escalations": int(res["escalations"]),
+                "warm_hits": int(res["warm_hits"]),
+                "sched_steps": int(np.sum(res["sched_steps"])),
+                "compressed_events": int(res["compressed_events"]),
             })
             info["compile_s"] += float(res["compile_s"])
             info["execute_s"] += float(res["execute_s"])
             info["retraces"] += int(res["retraces"])
             info["escalations"] += int(res["escalations"])
+            info["warm_hits"] += int(res["warm_hits"])
+            info["sched_steps"] += int(np.sum(res["sched_steps"]))
+            info["compressed_events"] += int(res["compressed_events"])
             info["peak_lane_width"] = max(info["peak_lane_width"],
                                           ch.lane_width)
             info["devices"] = ch.n_devices

@@ -130,7 +130,16 @@ def add_execution_arguments(ap: argparse.ArgumentParser) -> None:
     fingerprint.  Shared by every jax-capable grid CLI, including
     ``benchmarks/run.py`` which manages its own cache/worker flags."""
     ap.add_argument("--window", type=int, default=0,
-                    help="[jax] active-set window slots (0 = auto)")
+                    help="[jax] active-set window ladder floor (0 = start "
+                         "at the statics-predicted bucket)")
+    ap.add_argument("--events", type=int, default=4,
+                    help="[jax] per-lane events retired per scan step "
+                         "(event compression; results-invariant, 1 "
+                         "disables)")
+    ap.add_argument("--no-aot-warmup", dest="aot_warmup",
+                    action="store_false", default=True,
+                    help="[jax] disable background pre-compilation of the "
+                         "window ladder's upper buckets")
     ap.add_argument("--chunk", type=int, default=160,
                     help="[jax] scan steps between window compactions")
     ap.add_argument("--chunk-lanes", "--max-lane-width", dest="chunk_lanes",
@@ -145,10 +154,13 @@ def add_execution_arguments(ap: argparse.ArgumentParser) -> None:
                          "devices over a 1-D mesh (0 = all local devices, "
                          "1 = no sharding)")
     ap.add_argument("--expand-backend", default="bisect",
-                    choices=["bisect", "pallas", "pallas-interpret"],
+                    choices=["bisect", "pallas", "pallas-interpret",
+                             "fused", "fused-interpret"],
                     help="[jax] Step-3 greedy expand backend: sort-free "
-                         "threshold bisection (default) or the Pallas "
-                         "prefix-waterfill kernel")
+                         "threshold bisection (default), the Pallas "
+                         "prefix-waterfill kernel, or the fused Pallas "
+                         "Steps-1..3 scheduling kernel (-interpret "
+                         "variants run the kernels off-TPU)")
 
 
 def add_backend_arguments(ap: argparse.ArgumentParser, *,
@@ -209,4 +221,6 @@ def backend_options_from_args(args: argparse.Namespace) -> dict:
             "chunk": args.chunk, "chunk_lanes": args.chunk_lanes,
             "devices": args.devices,
             "expand_backend": args.expand_backend,
+            "events": getattr(args, "events", 4),
+            "aot_warmup": bool(getattr(args, "aot_warmup", True)),
             "progress": bool(getattr(args, "progress", False))}

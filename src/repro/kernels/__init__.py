@@ -7,11 +7,15 @@
 #   rmsnorm         — fused RMS normalization
 #   waterfill       — the scheduler's greedy shrink/expand prefix waterfill
 #                     (the paper's per-tick redistribution hot loop)
+#   schedule_tick   — the fused Steps-1..3 scheduling pass (FCFS prefix +
+#                     shadow-reservation backfill + shrink + expand) on a
+#                     VMEM-resident active window
 #
 # All kernels validate against ref.py with interpret=True on CPU.
 from . import ops, ref
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
+from .schedule_tick import fused_schedule_tick
 from .ssd_scan import ssd_scan
 from .waterfill import (greedy_expand_pallas, greedy_shrink_pallas,
                         waterfill)
@@ -19,4 +23,5 @@ from .waterfill import (greedy_expand_pallas, greedy_shrink_pallas,
 __all__ = [
     "ops", "ref", "flash_attention", "rmsnorm", "ssd_scan",
     "waterfill", "greedy_shrink_pallas", "greedy_expand_pallas",
+    "fused_schedule_tick",
 ]

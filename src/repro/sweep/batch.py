@@ -16,13 +16,31 @@ single policy core shared with the numpy DES and the dense-tick
    so the pass converges over subsequent ticks exactly like dense per-tick
    ElastiSim (the documented ``sim_jax`` fidelity model).
 
-2. **Active-set windowing.**  Per-step work is O(window), not O(jobs): each
-   lane's queued+running jobs (plus a prefetch reserve of upcoming arrivals)
-   are compacted into a fixed ``W``-slot buffer every ``chunk`` steps.
-   Buffer slots stay in FCFS (submit-rank) order, so the FCFS start pass is
-   a masked cumulative sum with no sorting.  A lane that would advance past
-   its last prefetched arrival freezes until the next compaction; if no lane
-   can advance at all the driver escalates to a 2x window and recompiles.
+2. **Active-set windowing over a bucketed ladder.**  Per-step work is
+   O(window), not O(jobs): each lane's queued+running jobs (plus a prefetch
+   reserve of upcoming arrivals) are compacted into a fixed ``W``-slot
+   buffer every ``chunk`` steps.  Buffer slots stay in FCFS (submit-rank)
+   order, so the FCFS start pass is a masked cumulative sum with no
+   sorting.  A lane that would advance past its last prefetched arrival
+   freezes until the next compaction; if no lane can advance at all the
+   driver escalates the window.  Window sizes come from a small static
+   menu of power-of-two buckets (:func:`window_ladder`), and the starting
+   bucket is picked from a lane-statics lower bound on the peak active set
+   (:func:`lane_statics`), so a whole sweep compiles at most
+   ``len(buckets)`` chunk kernels — typically exactly one — instead of one
+   per 2x escalation step.  Buckets above the start can be pre-compiled on
+   a background thread (``EngineConfig.aot_warmup``) so an escalation hits
+   a warm executable instead of stalling the run.
+
+2b. **Event compression.**  Each scan step retires up to
+   ``EngineConfig.events`` per-lane events instead of exactly one: a lane
+   keeps advancing through consecutive events whose scheduling pass is
+   provably a no-op (no queued jobs and no expansion possible), and the
+   single :func:`~repro.core.passes.schedule_tick` per step runs only for
+   lanes whose last event needs it.  Every micro-advance replays the exact
+   per-event arithmetic of the one-event step and skipped passes are
+   bitwise no-ops, so results are bit-identical for any ``events`` setting
+   while completion-dominated tails shrink their scan trip count.
 
 3. **Multi-trace padded batching.**  ``capacity`` and ``tick`` are per-lane
    *data* and shorter traces are padded with never-arriving jobs
@@ -124,12 +142,19 @@ class BatchedLanes(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     balanced: bool = False    # AVG lanes (balanced redistribution)
-    window: int = 0           # starting active-set slots; 0 = auto
+    window: int = 0           # ladder floor (starting bucket); 0 = auto:
+                              # pick the bucket covering the lane-statics
+                              # peak-active bound (128-slot ladder floor)
     chunk: int = 160          # scan steps between compactions
     fill_rounds: int = 2      # shadow-backfill fill rounds per pass
     reserve_slack: int = 64   # min arrival-prefetch slots kept in the window
     max_steps_factor: int = 16  # step budget = factor * n_jobs + 2048
-    expand_backend: str = "bisect"  # bisect | pallas | pallas-interpret
+    expand_backend: str = "bisect"  # bisect | pallas | pallas-interpret |
+                                    # fused | fused-interpret
+    events: int = 4           # max per-lane events retired per scan step
+                              # (results-neutral; 1 = one event per step)
+    aot_warmup: bool = True   # pre-compile upper ladder buckets on a
+                              # background thread (results-neutral)
 
 
 def build_lanes(
@@ -252,18 +277,83 @@ def pad_lanes(batch: BatchedLanes, width: int) -> BatchedLanes:
                           for name in BatchedLanes._fields])
 
 
+def _peak_active_bound(batch: BatchedLanes) -> int:
+    """Lower bound on the largest per-lane peak active (queued+running) set.
+
+    Two O(n log n) numpy bounds per lane, both provable lower bounds of
+    the true peak (a job is active on ``[submit, end_t]`` and
+    ``end_t >= submit + minimal service duration``), combined by max:
+
+    * **no-wait interval peak** — overlap count of the minimal-duration
+      intervals ``[submit, submit + dur(max_nodes)]``;
+    * **fluid backlog peak** — arrivals minus the most completions the
+      cluster's node-seconds budget ``capacity * (t - t0)`` could possibly
+      have served by each arrival instant (each job costs at least
+      ``1 / inv_ref`` node-seconds, its single-node work).
+
+    The bound only *guides* the starting window bucket — the window is
+    results-neutral and escalation corrects any under-estimate — but a
+    good guess is what collapses the compile ladder to one variant.
+    """
+    submit = np.asarray(batch.submit, np.float64)
+    finite = np.isfinite(submit)
+    if not np.any(finite):
+        return 0
+    inv_ref = np.asarray(batch.inv_ref, np.float64)
+    pfrac = np.asarray(batch.pfrac, np.float64)
+    mx = np.maximum(np.asarray(batch.max_nodes, np.float64), 1.0)
+    s_max = 1.0 / ((1.0 - pfrac) + pfrac / mx)
+    dur_min = 1.0 / np.maximum(inv_ref * s_max, 1e-30)
+
+    # (a) no-wait interval overlap peak (+1 at submit, -1 at earliest end)
+    t_pts = np.concatenate(
+        [np.where(finite, submit, np.inf),
+         np.where(finite, submit + dur_min, np.inf)], axis=1)
+    delta = np.concatenate(
+        [finite.astype(np.int64), -finite.astype(np.int64)], axis=1)
+    order = np.argsort(t_pts, axis=1, kind="stable")
+    overlap = int(np.max(np.cumsum(
+        np.take_along_axis(delta, order, axis=1), axis=1)))
+
+    # (b) fluid backlog: active(t_i) >= arrivals(t_i) - max completions,
+    # where completions by t_i are capped by the node-seconds budget spent
+    # on the cheapest jobs (1/inv_ref node-seconds each, served at most
+    # capacity nodes at once from the first submission on)
+    cap = np.asarray(batch.capacity, np.float64)[:, None]
+    ns_min = np.where(finite, 1.0 / np.maximum(inv_ref, 1e-30), np.inf)
+    ns_sorted = np.sort(ns_min, axis=1)
+    cum_ns = np.cumsum(np.where(np.isfinite(ns_sorted), ns_sorted, 0.0),
+                       axis=1)
+    sub_sorted = np.sort(np.where(finite, submit, np.inf), axis=1)
+    t0 = sub_sorted[:, :1]
+    budget = np.where(np.isfinite(sub_sorted),
+                      cap * (sub_sorted - t0), np.inf)
+    backlog = 0
+    arrived = np.arange(1, budget.shape[1] + 1)
+    for b in range(budget.shape[0]):
+        real = np.isfinite(sub_sorted[b])
+        if not np.any(real):
+            continue
+        done_max = np.searchsorted(cum_ns[b], budget[b], side="right")
+        backlog = max(backlog, int(np.max((arrived - done_max)[real])))
+    return max(overlap, backlog)
+
+
 def lane_statics(batch: BatchedLanes) -> Dict[str, int]:
     """Batch-level static compile parameters derived from lane data.
 
     ``prio_lo``/``prio_hi``/``span_max`` bound the greedy/balanced passes'
     integer and level bisections, ``with_classes`` gates the on-demand
     queue-priority passes, ``min_depth`` decides whether the EASY rank
-    cutoff can bind.  They only need to *cover* the lanes actually run, so
+    cutoff can bind, and ``peak_active`` (a lower bound on the largest
+    per-lane active set, :func:`_peak_active_bound`) picks the starting
+    window bucket.  They only need to *cover* the lanes actually run, so
     a chunked execution (:mod:`repro.sweep.shard`) computes them once on
     the **full** batch and reuses them for every chunk — keeping each
     chunk's compiled pass (notably the balanced level bisection, whose
     iteration count follows ``span_max``) bit-identical to the monolithic
-    batch's, and every chunk on one compilation.
+    batch's, every chunk on one compilation, and every chunk on the same
+    window bucket.
     """
     return {
         "prio_lo": -int(np.max(np.asarray(batch.prio_ref))),
@@ -273,6 +363,7 @@ def lane_statics(batch: BatchedLanes) -> Dict[str, int]:
                                           - batch.min_nodes))),
         "with_classes": bool(np.any(np.asarray(batch.on_demand))),
         "min_depth": int(np.min(np.asarray(batch.backfill_depth))),
+        "peak_active": _peak_active_bound(batch),
     }
 
 
@@ -290,6 +381,46 @@ def _peek_active(state):
 # so a second in-process run correctly reports zero retraces).
 _COMPILED_KEYS: set = set()
 
+# Background-AOT state: executables compiled off-thread via
+# `jit(...).lower(...).compile()`, keyed like `_COMPILED_KEYS`.  Module
+# level on purpose: a later chunk (or run) at the same key must call the
+# warm executable, not re-trace through jit's dispatch cache.
+_WARM_EXECUTABLES: Dict = {}
+_WARM_FUTURES: Dict = {}
+_WARM_POOL = None
+
+
+def _warm_pool():
+    global _WARM_POOL
+    if _WARM_POOL is None:
+        import concurrent.futures
+        _WARM_POOL = concurrent.futures.ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="sweep-aot")
+    return _WARM_POOL
+
+
+def window_ladder(floor: int, n: int) -> Tuple[int, ...]:
+    """The static window-bucket menu: ``floor * 2^k`` capped at ``n``.
+
+    Every window the engine ever runs at is a rung of this ladder, so a
+    whole sweep compiles at most ``len(ladder)`` chunk kernels per engine
+    structure — and in practice exactly one, because the starting rung is
+    picked from the lane-statics peak-active bound.
+    """
+    floor = max(1, min(floor, n))
+    rungs = [floor]
+    while rungs[-1] < n:
+        rungs.append(min(2 * rungs[-1], n))
+    return tuple(rungs)
+
+
+def _ladder_cover(ladder: Tuple[int, ...], need: int) -> int:
+    """Smallest rung >= ``need`` (the top rung when none is)."""
+    for w in ladder:
+        if w >= need:
+            return w
+    return ladder[-1]
+
 
 def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
                    verbose: bool = False,
@@ -300,23 +431,34 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     Output dict (numpy, job axes in submit-sorted order):
       ``state, alloc, start_t, end_t, expand_ops, shrink_ops`` (B, n);
       ``trace_t, trace_busy, trace_qlen`` (B, S) event-step timeline
-      (``trace_busy[k]`` holds on ``[trace_t[k], trace_t[k+1])``);
+      (``trace_busy[k]`` holds on ``[trace_t[k], trace_t[k+1])``; repeated
+      timestamps are zero-width — event compression emits them);
       ``bf_starts, sched_steps`` (B,) device-accumulated scheduling
       counters (out-of-order EASY starts / processed scheduling ticks per
-      lane — invariant under chunking, sharding and window size, so they
-      may ride in cell metrics without breaking execution-plan parity);
-      ``steps, window, finished``; and execution-only observability
-      scalars ``compile_s, execute_s, retraces, escalations`` (wall-clock
+      lane — invariant under chunking, sharding, window size and event
+      compression, so they may ride in cell metrics without breaking
+      execution-plan parity); ``steps, window, finished``; and
+      execution-only observability scalars ``compile_s, execute_s,
+      retraces, warm_hits, escalations, compressed_events`` (wall-clock
       split by whether the chunk call paid a trace+compile, the number of
-      fresh compile variants, and 2x window escalations — these describe
-      *this execution*, never the cells, and must stay out of metrics).
+      fresh foreground compile variants, warm AOT executables used,
+      window escalations, and per-lane events retired beyond the first of
+      their scan step — these describe *this execution*, never the cells,
+      and must stay out of metrics).
 
-    The window adapts per chunk: before each chunk the largest active set
-    is peeked and ``W`` escalates (2x, recompiling once per size — cached)
-    whenever active + arrival slack would not fit, or no lane advanced in
-    the previous chunk; it de-escalates with hysteresis when the active
-    set stays small.  Simulation state lives in full-size arrays between
-    chunks, so window switches continue the run instead of restarting it.
+    The window walks a static bucket ladder (:func:`window_ladder`): the
+    starting rung covers the lane-statics peak-active bound (or the
+    explicit ``cfg.window`` floor), before each chunk the largest active
+    set is peeked and ``W`` escalates straight to the covering rung
+    whenever active + arrival slack would not fit (or no lane advanced in
+    the previous chunk), and it de-escalates with hysteresis — but only
+    onto rungs that already have a compiled executable, so de-escalation
+    can never pay a fresh compile.  With ``cfg.aot_warmup`` the rungs
+    between the start and the predicted bucket (plus the next rung after
+    any escalation) are lowered + compiled on a background thread, so an
+    escalation hits a warm executable instead of stalling.  Simulation
+    state lives in full-size arrays between chunks, so window switches
+    continue the run instead of restarting it.
 
     If lanes are still unfinished when the step budget runs out, their
     jobs keep ``end_t = nan`` and ``finished`` is False (metrics report
@@ -337,8 +479,18 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     # cannot cut the scan: such compilations skip the rank mask entirely
     # (the default-depth grid pays nothing for the axis)
     min_depth = st["min_depth"]
-    W_min = int(min(cfg.window or 128, n))
-    W = W_min
+    ladder = window_ladder(int(cfg.window or 128), n)
+    # the rung the statics bound predicts the run will need; an explicit
+    # cfg.window pins the *start* to the ladder floor instead (that is
+    # how tests force escalation), with the predicted rungs warmed
+    predicted = _ladder_cover(
+        ladder, min(int(st.get("peak_active", 0)) + cfg.reserve_slack, n))
+    W0 = ladder[0] if cfg.window else predicted
+    W = W0
+
+    def key_for(w):
+        return (cfg, n, B, w, prio_lo, prio_hi, span_max, with_classes,
+                min_depth < w)
 
     def fn_for(w):
         # module-level cache: one trace/compile per static configuration
@@ -360,6 +512,22 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     # device-side scheduling counters, accumulated across chunks
     bf = jnp.zeros((B,), jnp.int32)      # out-of-order (backfill) starts
     nact = jnp.zeros((B,), jnp.int32)    # processed scheduling ticks
+    ncomp = jnp.zeros((B,), jnp.int32)   # events compressed into steps
+
+    def submit_warm(w):
+        """Queue a background lower+compile of rung ``w`` (idempotent)."""
+        ckey = key_for(w)
+        if (not cfg.aot_warmup or ckey in _COMPILED_KEYS
+                or ckey in _WARM_EXECUTABLES or ckey in _WARM_FUTURES):
+            return
+        fn = fn_for(w)
+        args = (batch, full, k, retrig, bf, nact, ncomp)
+        _WARM_FUTURES[ckey] = _warm_pool().submit(
+            lambda: fn.lower(*args).compile())
+
+    for w in ladder:  # warm the rungs a pinned-start run will escalate to
+        if W0 < w <= predicted:
+            submit_warm(w)
 
     traces: List[Tuple[np.ndarray, ...]] = []
     steps = 0
@@ -367,39 +535,86 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     low_streak = 0
     escalations = 0
     retraces = 0
+    warm_hits = 0
     compile_s = 0.0
     execute_s = 0.0
+
+    def escalate(need):
+        nonlocal W, low_streak, escalations
+        W = _ladder_cover(ladder, min(need, n))
+        low_streak = 0
+        escalations += 1
+        obs.counter("sweep.escalations")
+        nxt = _ladder_cover(ladder, min(2 * W, n))
+        if nxt > W:  # anticipate another escalation off-thread
+            submit_warm(nxt)
+
     max_steps = cfg.max_steps_factor * n + 2048
     while steps < max_steps:
         n_active = int(_peek_active(full["state"]))
-        while n_active + cfg.reserve_slack > W and W < n:
-            W = min(2 * W, n)
-            low_streak = 0
-            escalations += 1
-            obs.counter("sweep.escalations")
+        need = n_active + cfg.reserve_slack
+        if need > W and W < n:
+            escalate(need)
             if verbose:
                 print(f"[sweep.batch] active={n_active} -> window W={W}")
-        if W > W_min and n_active + cfg.reserve_slack <= W // 2:
+        elif W > W0 and need <= W // 2:
             low_streak += 1
             if low_streak >= 2:
-                W, low_streak = W // 2, 0
+                # smallest covering rung that already has an executable:
+                # de-escalation never pays a fresh compile
+                down = [w for w in ladder
+                        if W0 <= w < W and w >= need
+                        and (key_for(w) in _COMPILED_KEYS
+                             or key_for(w) in _WARM_EXECUTABLES)]
+                if down:
+                    W, low_streak = min(down), 0
         else:
             low_streak = 0
         w_peak = max(w_peak, W)
 
-        ckey = (cfg, n, B, W, prio_lo, prio_hi, span_max, with_classes,
-                min_depth < W)
-        first = ckey not in _COMPILED_KEYS
-        if first:
-            _COMPILED_KEYS.add(ckey)
-            retraces += 1
-            obs.counter("sweep.retraces")
+        ckey = key_for(W)
+        fn, is_warm, first = None, False, False
+        if ckey in _WARM_EXECUTABLES:
+            fn, is_warm = _WARM_EXECUTABLES[ckey], True
+        elif ckey in _WARM_FUTURES:
+            fut = _WARM_FUTURES.pop(ckey)
+            # blocking on an in-flight background compile is compile time
+            first = not fut.done()
+            try:
+                exe = fut.result()
+            except Exception:  # warm compile failed: fall back to jit
+                exe = None
+            if exe is not None:
+                _WARM_EXECUTABLES[ckey] = exe
+                _COMPILED_KEYS.add(ckey)
+                fn, is_warm = exe, True
+                warm_hits += 1
+                obs.counter("sweep.warm_hits")
+        if fn is None:
+            fn = fn_for(W)
+            if ckey not in _COMPILED_KEYS:
+                _COMPILED_KEYS.add(ckey)
+                first = True
+                retraces += 1
+                obs.counter("sweep.retraces")
+        obs.gauge("sweep.compile_variants", len(_COMPILED_KEYS))
         k_before = np.asarray(k)
         t_call = time.monotonic()
         with obs.span("sweep.compile" if first else "sweep.execute",
                       window=W, lanes=B, scan_steps=cfg.chunk):
-            full, k, retrig, bf, nact, ys, all_done = fn_for(W)(
-                batch, full, k, retrig, bf, nact)
+            try:
+                out = fn(batch, full, k, retrig, bf, nact, ncomp)
+            except Exception:
+                if not is_warm:
+                    raise
+                # an AOT executable can reject its arguments at call time
+                # (e.g. sharded inputs); fall back to the jit path once
+                _WARM_EXECUTABLES.pop(ckey, None)
+                first = True
+                retraces += 1
+                obs.counter("sweep.retraces")
+                out = fn_for(W)(batch, full, k, retrig, bf, nact, ncomp)
+            full, k, retrig, bf, nact, ncomp, ys, all_done = out
             # host conversion blocks on the device work, so the span (and
             # the compile/execute wall split) covers the real cost
             traces.append(tuple(np.asarray(y) for y in ys))
@@ -418,10 +633,7 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
             if W >= n:
                 raise SweepEngineError(
                     "engine stalled with the window at the full job count")
-            W = min(2 * W, n)
-            low_streak = 0
-            escalations += 1
-            obs.counter("sweep.escalations")
+            escalate(2 * W)
 
     out = {kk: np.asarray(v) for kk, v in full.items()}
     out["trace_t"] = np.concatenate([t for t, _, _ in traces], axis=1)
@@ -435,11 +647,13 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     out["compile_s"] = compile_s
     out["execute_s"] = execute_s
     out["retraces"] = retraces
+    out["warm_hits"] = warm_hits
     out["escalations"] = escalations
+    out["compressed_events"] = int(np.sum(np.asarray(ncomp)))
     return out
 
 
-@functools.lru_cache(maxsize=64)
+@functools.cache  # unbounded on purpose: see the eviction note in the doc
 def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
               prio_lo: int, prio_hi: int, span_max: int,
               with_classes: bool = False, depth_bounded: bool = True):
@@ -451,54 +665,133 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
     makes the multi-trace batch a single compile.  ``with_classes`` is the
     one workload-derived static: it gates the on-demand queue-priority
     passes so class-free batches pay nothing for the axis.
+
+    The cache is **unbounded** (`functools.cache`, not an lru_cache with a
+    maxsize): an evicted entry would silently recompile mid-sweep on
+    variant-heavy grids (depth x classes x ladder rungs x chunk widths),
+    and a traced chunk fn is small — the XLA executable it holds is the
+    thing worth pinning.  ``_COMPILED_KEYS``/``retraces`` assert on this.
+
+    Each scan step retires up to ``cfg.events`` per-lane events before the
+    single Steps-1..3 scheduling pass (event compression, module doc §2b);
+    the micro-advances past the first only take events whose scheduling
+    pass is provably a bitwise no-op, so results are invariant in
+    ``cfg.events`` and the emitted timeline only gains zero-width entries.
     """
     K = cfg.chunk
+    E = max(1, int(cfg.events))
     rows = jnp.arange(B)[:, None]
     INF = jnp.float32(jnp.inf)
 
     def step(bj, capacity, tick, depth, arrival_limit, carry, _):
         (bstate, balloc, brem, bstart, bend, beops, bsops,
-         k, retrig, frozen, bf, nact) = carry
-        t = k.astype(jnp.float32) * tick
-        running = bstate == RUNNING
-        alloc_f = jnp.maximum(balloc.astype(jnp.float32), 1.0)
-        s_cur = 1.0 / ((1.0 - bj.pfrac) + bj.pfrac / alloc_f)
-        rate = s_cur * bj.inv_ref
-        pending = bstate == PENDING
-        # one fused reduction over completions and arrivals
-        ev = jnp.where(running, t[:, None] + brem / rate,
-                       jnp.where(pending, bj.submit, INF))
-        t_event = jnp.min(ev, axis=-1)
-        t_event = jnp.minimum(t_event, jnp.where(retrig, t + tick, INF))
+         k, retrig, frozen, bf, nact, ncomp) = carry
 
-        # strictly-future tick: everything <= k*tick was already processed
-        k_cand = jnp.maximum(
-            jnp.ceil(t_event / tick - _TICK_EPS).astype(jnp.int32), k + 1)
-        t_cand = k_cand.astype(jnp.float32) * tick
-        # freeze before swallowing an arrival that was not prefetched
-        newly_frozen = t_cand + 0.5 * tick >= arrival_limit
-        act = ~frozen & ~newly_frozen & jnp.isfinite(t_event)
-        k_next = jnp.where(act, k_cand, k)
-        t_next = k_next.astype(jnp.float32) * tick
-        dt = jnp.maximum(t_next - t, 0.0)
+        def micro(st_):
+            """Retire one per-lane event (phases 1-4 of the classic step).
 
-        # progress + tick-quantized completions
-        brem = jnp.where(running, brem - dt[:, None] * rate, brem)
-        done_now = running & (brem <= _REM_EPS) & act[:, None]
-        bstate = jnp.where(done_now, DONE, bstate)
-        bend = jnp.where(done_now, t_next[:, None], bend)
-        balloc = jnp.where(done_now, 0, balloc)
-        brem = jnp.where(done_now, 0.0, brem)
+            Lanes halt (and stop micro-advancing) at the first event whose
+            post-advance state needs a real scheduling pass; events whose
+            pass would be a bitwise no-op — nothing queued AND (no free
+            nodes OR no expand headroom) — advance straight through.
+            """
+            (bstate, balloc, brem, bstart, bend,
+             k, retrig, frozen, halted, n_adv, nact) = st_
+            t = k.astype(jnp.float32) * tick
+            running = bstate == RUNNING
+            alloc_f = jnp.maximum(balloc.astype(jnp.float32), 1.0)
+            s_cur = 1.0 / ((1.0 - bj.pfrac) + bj.pfrac / alloc_f)
+            rate = s_cur * bj.inv_ref
+            pending = bstate == PENDING
+            # one fused reduction over completions and arrivals
+            ev = jnp.where(running, t[:, None] + brem / rate,
+                           jnp.where(pending, bj.submit, INF))
+            t_event = jnp.min(ev, axis=-1)
+            t_event = jnp.minimum(t_event,
+                                  jnp.where(retrig, t + tick, INF))
 
-        # arrivals (half-tick slack absorbs f32 rounding of the ceil)
-        arrived = pending & act[:, None] & \
-            (bj.submit <= (t_next + 0.5 * tick)[:, None])
-        bstate = jnp.where(arrived, QUEUED, bstate)
+            # strictly-future tick: <= k*tick was already processed
+            k_cand = jnp.maximum(
+                jnp.ceil(t_event / tick - _TICK_EPS).astype(jnp.int32),
+                k + 1)
+            t_cand = k_cand.astype(jnp.float32) * tick
+            # freeze before swallowing an arrival that was not prefetched;
+            # halted lanes re-check after their pending scheduling pass
+            # (next scan step), exactly where the classic loop checks
+            newly_frozen = (t_cand + 0.5 * tick >= arrival_limit) \
+                & ~halted & ~frozen
+            act = ~frozen & ~halted & ~newly_frozen & jnp.isfinite(t_event)
+            k = jnp.where(act, k_cand, k)
+            t_next = k.astype(jnp.float32) * tick
+            dt = jnp.maximum(t_next - t, 0.0)
+
+            # progress + tick-quantized completions (dt = 0 lanes advance
+            # by exactly 0.0: bit-exact identity on brem)
+            brem = jnp.where(running, brem - dt[:, None] * rate, brem)
+            done_now = running & (brem <= _REM_EPS) & act[:, None]
+            bstate = jnp.where(done_now, DONE, bstate)
+            bend = jnp.where(done_now, t_next[:, None], bend)
+            balloc = jnp.where(done_now, 0, balloc)
+            brem = jnp.where(done_now, 0.0, brem)
+
+            # arrivals (half-tick slack absorbs f32 rounding of the ceil)
+            arrived = pending & act[:, None] & \
+                (bj.submit <= (t_next + 0.5 * tick)[:, None])
+            bstate = jnp.where(arrived, QUEUED, bstate)
+
+            # halting predicate: the Steps-1..3 pass is a bitwise no-op
+            # iff nothing is queued (no starts, no head -> no backfill,
+            # no shrink) and expand has no free nodes or no headroom
+            run_now = bstate == RUNNING
+            queued_ct = jnp.sum((bstate == QUEUED).astype(jnp.int32),
+                                axis=-1)
+            free_now = capacity - jnp.sum(
+                jnp.where(run_now, balloc, 0), axis=-1)
+            room_tot = jnp.sum(
+                jnp.where(run_now & bj.malleable,
+                          jnp.maximum(bj.max_nodes - balloc, 0), 0),
+                axis=-1)
+            noop = (queued_ct == 0) & ((free_now <= 0) | (room_tot == 0))
+            # the classic loop clears retrig after a no-op pass
+            retrig = jnp.where(act & noop, False, retrig)
+            halted = halted | (act & ~noop)
+            frozen = frozen | newly_frozen
+            nact = nact + act.astype(jnp.int32)
+            n_adv = n_adv + act.astype(jnp.int32)
+
+            busy = jnp.sum(jnp.where(run_now, balloc, 0), axis=-1)
+            st_ = (bstate, balloc, brem, bstart, bend,
+                   k, retrig, frozen, halted, n_adv, nact)
+            return st_, (t_next, busy.astype(jnp.int32), queued_ct)
+
+        def dup(st_):
+            # every lane halted/frozen: emit a zero-width duplicate entry
+            bstate, balloc = st_[0], st_[1]
+            t_now = st_[5].astype(jnp.float32) * tick
+            busy = jnp.sum(jnp.where(bstate == RUNNING, balloc, 0),
+                           axis=-1)
+            qlen = jnp.sum((bstate == QUEUED).astype(jnp.int32), axis=-1)
+            return st_, (t_now, busy.astype(jnp.int32), qlen)
+
+        halted = jnp.zeros_like(frozen)
+        n_adv = jnp.zeros((B,), jnp.int32)
+        st_ = (bstate, balloc, brem, bstart, bend,
+               k, retrig, frozen, halted, n_adv, nact)
+        st_, emit = micro(st_)
+        emits = [emit]
+        for _ in range(E - 1):
+            live = jnp.any(~st_[8] & ~st_[7])  # ~halted & ~frozen
+            st_, emit = jax.lax.cond(live, micro, dup, st_)
+            emits.append(emit)
+        (bstate, balloc, brem, bstart, bend,
+         k, retrig, frozen, halted, n_adv, nact) = st_
 
         running0 = bstate == RUNNING
         alloc0 = balloc
         state0 = bstate
-        # shared Steps 1-3 scheduling pass (policy core)
+        t_now = k.astype(jnp.float32) * tick
+        # shared Steps 1-3 scheduling pass (policy core), once per scan
+        # step, on the lanes that halted at an event that needs it
         params = PassParams(
             malleable=bj.malleable, min_nodes=bj.min_nodes,
             max_nodes=bj.max_nodes, want=bj.want, floor=bj.floor,
@@ -506,8 +799,8 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             pfrac=bj.pfrac, wall_work=bj.wall_work,
             on_demand=bj.on_demand)
         bstate, balloc, bstart = schedule_tick(
-            params, bstate, balloc, brem, bstart, act[:, None],
-            capacity, t_next, balanced=cfg.balanced,
+            params, bstate, balloc, brem, bstart, halted[:, None],
+            capacity, t_now, balanced=cfg.balanced,
             fill_rounds=cfg.fill_rounds, prio_lo=prio_lo, prio_hi=prio_hi,
             span_max=span_max, expand_backend=cfg.expand_backend,
             backfill_depth=depth if depth_bounded else None,
@@ -531,20 +824,37 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
         earlier_q = jnp.cumsum(qd, axis=-1) - qd
         bf = bf + jnp.sum(started_now & (earlier_q > 0),
                           axis=-1).astype(jnp.int32)
-        nact = nact + act.astype(jnp.int32)
+        ncomp = ncomp + jnp.maximum(n_adv - 1, 0)
 
         busy = jnp.sum(jnp.where(bstate == RUNNING, balloc, 0), axis=-1)
         qlen = jnp.sum((bstate == QUEUED).astype(jnp.int32), axis=-1)
-        # rerun next tick while a pass changed state and jobs stayed queued
+        # rerun next tick while a pass changed state and jobs stayed
+        # queued (no-op passes were cleared in the micro-advance already).
+        # Only lanes whose halting event got a real pass may rewrite the
+        # flag: a lane frozen with a retrig pending (its re-tick would
+        # swallow an unprefetched arrival) must carry it through the
+        # trailing no-op steps and resume the cascade after compaction —
+        # overwriting it here would drop a scheduling invocation and shift
+        # starts by a tick whenever a freeze lands mid-cascade.
         changed = jnp.any((balloc != alloc0) | (bstate != state0), axis=-1)
-        retrig = changed & (qlen > 0)
-        frozen = frozen | newly_frozen
+        retrig = jnp.where(halted, changed & (qlen > 0), retrig)
+
+        # timeline fixup: the halting event's entry (index n_adv - 1, and
+        # every zero-width duplicate after it) was emitted pre-schedule;
+        # the classic loop emits post-schedule values at that timestamp
+        ts = jnp.stack([e[0] for e in emits])        # (E, B)
+        busy_e = jnp.stack([e[1] for e in emits])
+        qlen_e = jnp.stack([e[2] for e in emits])
+        fix = jnp.arange(E)[:, None] >= jnp.maximum(n_adv - 1, 0)[None, :]
+        busy_e = jnp.where(fix, busy.astype(jnp.int32)[None, :], busy_e)
+        qlen_e = jnp.where(fix, qlen[None, :], qlen_e)
+
         carry = (bstate, balloc, brem, bstart, bend, beops, bsops,
-                 k_next, retrig, frozen, bf, nact)
-        return carry, (t_next, busy.astype(jnp.int32), qlen)
+                 k, retrig, frozen, bf, nact, ncomp)
+        return carry, (ts, busy_e, qlen_e)
 
     @jax.jit
-    def run_chunk(batch, full, k, retrig, bf, nact):
+    def run_chunk(batch, full, k, retrig, bf, nact, ncomp):
         state = full["state"]
         active = (state == QUEUED) | (state == RUNNING)
         n_active = jnp.sum(active, axis=-1)
@@ -599,14 +909,14 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             g2(full["start_t"], jnp.float32(jnp.nan)),
             g2(full["end_t"], jnp.float32(jnp.nan)),
             g2(full["expand_ops"], 0), g2(full["shrink_ops"], 0),
-            k, retrig, jnp.zeros((B,), bool), bf, nact,
+            k, retrig, jnp.zeros((B,), bool), bf, nact, ncomp,
         )
         carry, ys = jax.lax.scan(
             lambda c, x: step(bj, batch.capacity, batch.tick,
                               batch.backfill_depth, arrival_limit, c, x),
             carry, None, length=K)
         (bstate, balloc, brem, bstart, bend, beops, bsops,
-         k, retrig, _frozen, bf, nact) = carry
+         k, retrig, _frozen, bf, nact, ncomp) = carry
 
         def sc(a, buf):  # idx == n rows are dropped (out of bounds)
             return a.at[rows, idx].set(buf)
@@ -621,7 +931,13 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             shrink_ops=sc(full["shrink_ops"], bsops),
         )
         all_done = jnp.all(full["state"] == DONE)
-        ts, busy, qlen = ys
-        return full, k, retrig, bf, nact, (ts.T, busy.T, qlen.T), all_done
+        ts, busy, qlen = ys  # (K, E, B): E compressed entries per step
+        KE = K * E
+
+        def flat(a):
+            return a.reshape(KE, B).T
+
+        return (full, k, retrig, bf, nact, ncomp,
+                (flat(ts), flat(busy), flat(qlen)), all_done)
 
     return run_chunk

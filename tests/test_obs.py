@@ -298,9 +298,92 @@ def test_check_perf_pass_fail_tolerance(tmp_path):
     # ... but never a hard-ratio breach
     assert cp.main(["--timing", str(very_slow), *argv,
                     "--warn-only"]) == 1
-    # a wider tolerance passes the same record
+    # a wider tolerance passes the same record (the component gates must
+    # be widened too: slow's execute_s regressed along with its total_s)
     assert cp.main(["--timing", str(slow), "--baseline", str(baseline),
-                    "--tolerance", "2.5"]) == 0
+                    "--tolerance", "2.5", "--execute-tolerance",
+                    "2.5"]) == 0
+
+
+def test_check_perf_component_gates(tmp_path):
+    """compile_s and execute_s are gated separately from total_s."""
+    cp = _check_perf()
+    base = _timing(tmp_path, "timing-base.json", 100.0)
+    baseline = tmp_path / "BENCH.json"
+    cp.main(["--timing", str(base), "--baseline", str(baseline),
+             "--write-baseline"])
+    # compile_s leaks 5x while total_s stays inside tolerance: a retrace
+    # leak hidden by a faster execute must still fail the gate
+    leak = _timing(tmp_path, "timing-leak.json", 110.0,
+                   roofline={"compile_s": 50.0, "execute_s": 60.0})
+    assert cp.main(["--timing", str(leak), "--baseline",
+                    str(baseline)]) == 1
+    assert cp.main(["--timing", str(leak), "--baseline", str(baseline),
+                    "--compile-tolerance", "6.0", "--hard-ratio",
+                    "8.0"]) == 0
+    # execute_s regression with flat compile/total fails on its own gate
+    slow_ex = _timing(tmp_path, "timing-slowex.json", 100.0,
+                      roofline={"compile_s": 10.0, "execute_s": 140.0})
+    assert cp.main(["--timing", str(slow_ex), "--baseline",
+                    str(baseline)]) == 1
+
+
+def test_check_perf_write_baseline_keeps_history(tmp_path):
+    cp = _check_perf()
+    baseline = tmp_path / "BENCH.json"
+    for i, total in enumerate([100.0, 90.0, 80.0]):
+        rec = _timing(tmp_path, f"timing-{i}.json", total)
+        assert cp.main(["--timing", str(rec), "--baseline", str(baseline),
+                        "--write-baseline"]) == 0
+    final = json.loads(baseline.read_text())
+    assert final["total_s"] == 80.0
+    hist = final["history"]
+    assert [h["total_s"] for h in hist] == [100.0, 90.0]
+    # prior baselines enter history flattened, never nested
+    assert all("history" not in h for h in hist)
+
+
+def test_check_perf_compare_cold(tmp_path):
+    """The warm-rerun gate asserts the compile budget collapsed."""
+    cp = _check_perf()
+    cold = _timing(tmp_path, "timing-cold.json", 60.0,
+                   xla_cache_state="cold",
+                   roofline={"compile_s": 50.0, "execute_s": 10.0})
+    warm = _timing(tmp_path, "timing-warm.json", 13.0,
+                   xla_cache_state="warm",
+                   roofline={"compile_s": 3.0, "execute_s": 10.0})
+    assert cp.main(["--timing", str(warm), "--compare-cold",
+                    str(cold)]) == 0
+    # a warm rerun that still recompiles most of the grid fails
+    lukewarm = _timing(tmp_path, "timing-luke.json", 40.0,
+                       xla_cache_state="warm",
+                       roofline={"compile_s": 30.0, "execute_s": 10.0})
+    assert cp.main(["--timing", str(lukewarm), "--compare-cold",
+                    str(cold)]) == 1
+    # a record not marked warm cannot pass as a warm rerun
+    notwarm = _timing(tmp_path, "timing-notwarm.json", 13.0,
+                      roofline={"compile_s": 3.0, "execute_s": 10.0})
+    assert cp.main(["--timing", str(notwarm), "--compare-cold",
+                    str(cold)]) == 2
+    # mismatched grids refuse to compare
+    other = _timing(tmp_path, "timing-other.json", 13.0, scale=0.2,
+                    xla_cache_state="warm",
+                    roofline={"compile_s": 3.0, "execute_s": 10.0})
+    assert cp.main(["--timing", str(other), "--compare-cold",
+                    str(cold)]) == 2
+
+
+def test_check_perf_cache_state_is_part_of_the_grid(tmp_path):
+    """A warm timing record never compares against a cold baseline."""
+    cp = _check_perf()
+    base = _timing(tmp_path, "timing-base.json", 100.0)
+    baseline = tmp_path / "BENCH.json"
+    cp.main(["--timing", str(base), "--baseline", str(baseline),
+             "--write-baseline"])
+    warm = _timing(tmp_path, "timing-warm.json", 50.0,
+                   xla_cache_state="warm")
+    assert cp.main(["--timing", str(warm), "--baseline",
+                    str(baseline)]) == 2
 
 
 def test_check_perf_grid_mismatch(tmp_path):

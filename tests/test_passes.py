@@ -317,6 +317,56 @@ def test_pallas_give_matches_bisection_give(trial):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
 
 
+# ---------------------------------------------- fused schedule_tick kernel
+def _random_tick_case(rng, B=4, W=24):
+    """A plausible mid-simulation slot state for one schedule_tick call."""
+    from repro.core.jobs import QUEUED, RUNNING
+    mn = rng.integers(1, 3, (B, W)).astype(np.int32)
+    mx = (mn + rng.integers(0, 6, (B, W))).astype(np.int32)
+    want = np.clip(rng.integers(1, 7, (B, W)), mn, mx).astype(np.int32)
+    state = rng.choice(4, size=(B, W), p=[0.2, 0.4, 0.3, 0.1])
+    alloc = np.where(state == RUNNING, want, 0).astype(np.int32)
+    p = passes.PassParams(
+        malleable=jnp.asarray(rng.random((B, W)) < 0.7),
+        min_nodes=jnp.asarray(mn), max_nodes=jnp.asarray(mx),
+        want=jnp.asarray(want), floor=jnp.asarray(mn),
+        shrink_floor=jnp.asarray(mn),
+        prio_ref=jnp.asarray(rng.integers(0, 3, (B, W)), jnp.int32),
+        pfrac=jnp.asarray(rng.uniform(0.3, 1.0, (B, W)), jnp.float32),
+        wall_work=jnp.asarray(rng.uniform(20.0, 200.0, (B, W)),
+                              jnp.float32))
+    args = (p, jnp.asarray(state, jnp.int32), jnp.asarray(alloc),
+            jnp.asarray(rng.uniform(1.0, 80.0, (B, W)), jnp.float32),
+            jnp.asarray(np.where(state == RUNNING,
+                                 rng.uniform(0.0, 40.0, (B, W)), 0.0),
+                        jnp.float32),
+            jnp.asarray(rng.random(B) < 0.8)[:, None],
+            jnp.asarray(rng.integers(8, 16, B), jnp.int32),
+            jnp.asarray(rng.uniform(30.0, 60.0, B), jnp.float32))
+    del QUEUED
+    return args
+
+
+@pytest.mark.parametrize("trial", range(6))
+@pytest.mark.parametrize("depth", [None, 2])
+def test_fused_schedule_tick_matches_reference(trial, depth):
+    """The fused Pallas Steps-1..3 kernel (interpret mode) is bit-equal to
+    the reference pass on random slot states, bounded depth included."""
+    rng = np.random.default_rng(500 + trial)
+    args = _random_tick_case(rng)
+    B = args[1].shape[0]
+    kw = dict(balanced=False, fill_rounds=2, prio_lo=-4, prio_hi=12,
+              span_max=8,
+              backfill_depth=None if depth is None
+              else jnp.full((B,), depth, jnp.int32))
+    ref = passes.schedule_tick(*args, expand_backend="bisect", **kw)
+    got = passes.schedule_tick(*args, expand_backend="fused-interpret",
+                               **kw)
+    for r, g, name in zip(ref, got, ("state", "alloc", "start_t")):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(g),
+                                      err_msg=name)
+
+
 # ------------------------------------------- multi-cluster padded batching
 def test_concat_lanes_matches_per_workload_runs():
     """Lanes of different workloads/clusters stacked into one padded batch

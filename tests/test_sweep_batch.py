@@ -131,6 +131,102 @@ def test_batched_transform_grid_nests_across_proportions():
     assert np.all(~m30 | m90)
 
 
+# ------------------------------------------- compile budget / hot loop
+def _bit_equal(res_a, res_b, keys=("start_t", "end_t", "state",
+                                   "bf_starts", "shrink_ops",
+                                   "expand_ops")):
+    for key in keys:
+        np.testing.assert_array_equal(
+            np.asarray(res_a[key]), np.asarray(res_b[key]), err_msg=key)
+
+
+def test_event_compression_is_results_neutral():
+    """E=1 (one event per scan step) and E=4 (compressed) must be
+    bit-identical: compression only merges no-op scheduling passes.
+
+    The rigid lane's tail (queue drained, no expansion room) is all
+    no-op completion events — the regime compression targets."""
+    rng = np.random.default_rng(7)
+    n = 20
+    w = Workload.rigid(submit=np.sort(rng.uniform(0, 5.0, n)),
+                       runtime=rng.uniform(20, 120, n),
+                       nodes_req=np.ones(n, dtype=np.int64))
+    batch, _order = build_lanes(w, 10, [(STRATEGIES["easy"], 0.0, 0),
+                                        (STRATEGIES["min"], 0.6, 0)])
+    res1 = simulate_lanes(batch, EngineConfig(window=16, chunk=64,
+                                              events=1))
+    res4 = simulate_lanes(batch, EngineConfig(window=16, chunk=64,
+                                              events=4))
+    assert res1["finished"] and res4["finished"]
+    assert res4["compressed_events"] > 0  # E=4 actually compressed
+    assert res1["compressed_events"] == 0
+    _bit_equal(res1, res4)
+
+
+def test_escalated_run_matches_fresh_larger_bucket():
+    """A run forced through window escalation must produce the same cells
+    as a fresh run started at the final bucket (execution-plan
+    invariance: the ladder is a perf knob, not a semantics knob)."""
+    w = _wl(n=30, hi=60.0)  # heavy burst -> forces escalation from 4
+    batch, _order = build_lanes(w, 10, [(STRATEGIES["easy"], 0.0, 0),
+                                        (STRATEGIES["min"], 0.8, 1)])
+    forced = simulate_lanes(batch, EngineConfig(window=4, chunk=32,
+                                                reserve_slack=2))
+    assert forced["escalations"] > 0
+    fresh = simulate_lanes(batch, EngineConfig(window=forced["window"],
+                                               chunk=32, reserve_slack=2))
+    assert fresh["escalations"] == 0
+    _bit_equal(forced, fresh)
+
+
+def test_chunk_fn_cache_is_unbounded_and_rerun_never_retraces():
+    """Regression: ``_chunk_fn`` once sat behind an ``lru_cache`` whose
+    eviction caused steady-state retraces on multi-variant sweeps.  The
+    cache must be unbounded and a repeat run must re-trace nothing."""
+    from repro.sweep.batch import _chunk_fn
+    assert _chunk_fn.cache_info().maxsize is None
+    batch, _order = build_lanes(_wl(), 10, LANES)
+    cfg = EngineConfig(window=16, chunk=64)
+    simulate_lanes(batch, cfg)
+    rerun = simulate_lanes(batch, cfg)
+    assert rerun["retraces"] == 0
+
+
+def test_fused_backend_matches_bisect_engine():
+    """The fused Pallas schedule_tick (interpret mode off-TPU) reproduces
+    the reference pass bit-for-bit through a whole engine run."""
+    batch, _order = build_lanes(_wl(n=25, hi=100.0), 10, LANES)
+    ref = simulate_lanes(batch, EngineConfig(window=16, chunk=64))
+    fused = simulate_lanes(batch, EngineConfig(
+        window=16, chunk=64, expand_backend="fused-interpret"))
+    assert fused["finished"]
+    _bit_equal(ref, fused)
+    np.testing.assert_array_equal(np.asarray(ref["sched_steps"]),
+                                  np.asarray(fused["sched_steps"]))
+
+
+@pytest.mark.parametrize("events", [1, 4])
+def test_agreement_with_reference_des_under_compression(events):
+    """DES parity holds with the compressed event loop at either depth."""
+    rng = np.random.default_rng(5)
+    n = 12
+    w = Workload.rigid(submit=np.sort(rng.uniform(0, 200, n)),
+                       runtime=rng.uniform(20, 80, n),
+                       nodes_req=rng.choice([1, 2], n))
+    lanes = [(STRATEGIES["easy"], 0.0, 0), (STRATEGIES["min"], 0.5, 1)]
+    batch, order = build_lanes(w, 10, lanes)
+    res = simulate_lanes(batch, EngineConfig(window=16, chunk=64,
+                                             events=events))
+    inv = np.argsort(order)
+    for b, (strat, prop, seed) in enumerate(lanes):
+        wm = (w if prop == 0.0 else
+              transform_rigid_to_malleable(w, prop, seed, 10))
+        ref = simulate(wm, TINY, strat)
+        np.testing.assert_allclose(res["start_t"][b][inv], ref.start,
+                                   atol=2.0)
+        np.testing.assert_allclose(res["end_t"][b][inv], ref.end, atol=4.0)
+
+
 # ---------------------------------------------------------------- cache
 def test_cache_roundtrip_and_miss(tmp_path):
     cache = SweepCache(tmp_path)

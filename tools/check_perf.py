@@ -10,16 +10,32 @@ on purpose: CI calls it without PYTHONPATH or any repro import.
 Comparison contract:
 
 * The baseline and the timing record must describe the **same grid**
-  (engine, scale, seeds, workload set) — anything else exits 2
-  ("mismatch"), because a ratio across different grids is meaningless.
+  (engine, scale, seeds, workload set, XLA-cache state) — anything else
+  exits 2 ("mismatch"), because a ratio across different grids is
+  meaningless.  Cold and warm runs are gated separately: a record made
+  against a populated ``artifacts/xla_cache`` carries
+  ``xla_cache_state: warm`` and only compares to a warm baseline.
 * ``total_s`` beyond ``baseline * --tolerance`` is a **regression**
   (exit 1).  ``--warn-only`` downgrades it to a warning (exit 0) for
   noisy shared runners — except beyond ``baseline * --hard-ratio``
   (default 3x), which always fails: no shared-runner jitter explains a
   3x slowdown, only a real regression (or a broken baseline) does.
-* The compile/execute split (jax engine) is reported alongside so a
-  regression can be attributed: a compile_s jump is a retrace leak, an
-  execute_s jump is an engine slowdown.
+* The compile/execute split (jax engine) is gated **per component** when
+  both records carry it: ``compile_s`` against ``--compile-tolerance``
+  (a jump is a retrace leak or a broken warm-up) and ``execute_s``
+  against ``--execute-tolerance`` (a jump is an engine slowdown).  The
+  hard ratio and ``--warn-only`` apply the same way as for total_s.
+* ``--compare-cold COLD.json`` switches to the warm-rerun check: the
+  --timing record must be a warm rerun of the same grid as COLD.json and
+  its compile_s must be at most ``(1 - --min-compile-reduction)`` of the
+  cold compile_s (default: a 75% reduction).  This is the CI assertion
+  that the persistent-cache + AOT warm-up path actually collapses the
+  compile budget.
+
+``--write-baseline`` refreshes the baseline and **preserves provenance**:
+the previous baseline (minus its own history) is appended to a bounded
+``history`` list so the committed file records how the reference numbers
+moved across PRs.
 
 Exit codes: 0 pass/warn, 1 regression, 2 grid mismatch or unusable file.
 
@@ -30,6 +46,8 @@ Examples::
       --warn-only                      # CI shared-runner mode
   python tools/check_perf.py --timing artifacts/sweep-timing-jax.json \
       --write-baseline                 # refresh BENCH_sweep.json
+  python tools/check_perf.py --timing artifacts/sweep-timing-jax-warm.json \
+      --compare-cold artifacts/sweep-timing-jax.json  # warm-up gate
 """
 from __future__ import annotations
 
@@ -44,6 +62,9 @@ DEFAULT_BASELINE = REPO_ROOT / "BENCH_sweep.json"
 # the fields that must agree for two records to be rate-comparable
 GRID_KEYS = ("engine", "scale", "seeds", "batch_workloads")
 
+# cap on the provenance trail kept inside the committed baseline
+HISTORY_LIMIT = 20
+
 
 def load_record(path: pathlib.Path) -> dict:
     try:
@@ -56,11 +77,22 @@ def load_record(path: pathlib.Path) -> dict:
     return rec
 
 
-def grid_of(rec: dict) -> dict:
+def grid_of(rec: dict, with_cache_state: bool = True) -> dict:
     g = {k: rec.get(k) for k in GRID_KEYS}
     if isinstance(g.get("batch_workloads"), list):
         g["batch_workloads"] = sorted(g["batch_workloads"])
+    if with_cache_state:
+        # records predating schema addition were all cold-measured
+        g["xla_cache_state"] = rec.get("xla_cache_state", "cold")
     return g
+
+
+def components_of(rec: dict) -> dict:
+    """The gated compile/execute split, from either record shape."""
+    roof = rec.get("roofline")
+    src = roof if isinstance(roof, dict) else rec
+    return {k: src.get(k) for k in ("compile_s", "execute_s")
+            if isinstance(src.get(k), (int, float))}
 
 
 def baseline_from(rec: dict) -> dict:
@@ -76,6 +108,81 @@ def baseline_from(rec: dict) -> dict:
     return out
 
 
+def check_ratio(label: str, got: float, base: float, tolerance: float,
+                hard_ratio: float, warn_only: bool) -> int:
+    """Gate one metric; returns the exit contribution (0 or 1)."""
+    ratio = got / base if base > 0 else float("inf")
+    print(f"[check_perf] {label} {got:.1f} vs baseline {base:.1f} "
+          f"-> ratio {ratio:.2f} (tolerance {tolerance:.2f}, "
+          f"hard {hard_ratio:.2f})")
+    if ratio > hard_ratio:
+        print(f"[check_perf] FAIL: {label} {ratio:.2f}x exceeds the hard "
+              f"ratio {hard_ratio:.2f}x — regression (or stale baseline)")
+        return 1
+    if ratio > tolerance:
+        if warn_only:
+            print(f"[check_perf] WARN: {label} {ratio:.2f}x exceeds "
+                  f"tolerance {tolerance:.2f}x (ignored: --warn-only)")
+            return 0
+        print(f"[check_perf] FAIL: {label} {ratio:.2f}x exceeds tolerance "
+              f"{tolerance:.2f}x")
+        return 1
+    return 0
+
+
+def compare_cold(timing: dict, cold: dict, min_reduction: float) -> int:
+    """Warm-rerun gate: compile_s must collapse vs the cold record."""
+    if grid_of(timing, with_cache_state=False) != grid_of(
+            cold, with_cache_state=False):
+        print(f"[check_perf] MISMATCH: warm grid "
+              f"{grid_of(timing, with_cache_state=False)} != cold grid "
+              f"{grid_of(cold, with_cache_state=False)}; refusing to "
+              "compare")
+        return 2
+    if timing.get("xla_cache_state", "cold") != "warm":
+        print("[check_perf] MISMATCH: --timing record is not a warm run "
+              "(xla_cache_state != warm); rerun with a populated "
+              "artifacts/xla_cache")
+        return 2
+    warm_c = components_of(timing).get("compile_s")
+    cold_c = components_of(cold).get("compile_s")
+    if warm_c is None or cold_c is None or cold_c <= 0:
+        print("[check_perf] MISMATCH: compile_s split missing from one of "
+              "the records; the warm-up gate needs the jax roofline")
+        return 2
+    reduction = 1.0 - warm_c / cold_c
+    print(f"[check_perf] warm compile_s {warm_c:.1f} vs cold "
+          f"{cold_c:.1f} -> reduction {reduction * 100:.1f}% "
+          f"(required >= {min_reduction * 100:.0f}%)")
+    if reduction < min_reduction:
+        print(f"[check_perf] FAIL: persistent-cache warm rerun only cut "
+              f"compile time by {reduction * 100:.1f}% — the AOT warm-up "
+              "or the XLA compilation cache is broken")
+        return 1
+    print("[check_perf] PASS (warm-up gate)")
+    return 0
+
+
+def write_baseline(timing: dict, baseline_path: pathlib.Path) -> int:
+    new = baseline_from(timing)
+    if baseline_path.exists():
+        try:
+            prev = json.loads(baseline_path.read_text())
+        except (OSError, json.JSONDecodeError):
+            prev = None
+        if isinstance(prev, dict) and "total_s" in prev:
+            history = [h for h in prev.get("history", [])
+                       if isinstance(h, dict)]
+            history.append({k: v for k, v in prev.items()
+                            if k != "history"})
+            new["history"] = history[-HISTORY_LIMIT:]
+    baseline_path.write_text(json.dumps(new, indent=1) + "\n")
+    print(f"[check_perf] wrote baseline {baseline_path} "
+          f"(total_s={timing['total_s']:.1f}, "
+          f"history={len(new.get('history', []))})")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__.splitlines()[0],
@@ -89,6 +196,12 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=1.5,
                     help="fail when total_s > baseline * tolerance "
                          "(default 1.5)")
+    ap.add_argument("--compile-tolerance", type=float, default=1.75,
+                    help="fail when compile_s > baseline * this "
+                         "(default 1.75; jax records only)")
+    ap.add_argument("--execute-tolerance", type=float, default=1.5,
+                    help="fail when execute_s > baseline * this "
+                         "(default 1.5; jax records only)")
     ap.add_argument("--hard-ratio", type=float, default=3.0,
                     help="always fail beyond this ratio, even with "
                          "--warn-only (default 3.0)")
@@ -96,20 +209,34 @@ def main(argv=None) -> int:
                     help="downgrade a tolerance breach to a warning "
                          "(shared CI runners); the hard ratio still fails")
     ap.add_argument("--write-baseline", action="store_true",
-                    help="(re)write the baseline from --timing and exit")
+                    help="(re)write the baseline from --timing and exit; "
+                         "the previous baseline is kept in `history`")
+    ap.add_argument("--compare-cold", metavar="COLD_JSON",
+                    help="warm-rerun mode: assert --timing's compile_s "
+                         "collapsed vs this cold record (same grid)")
+    ap.add_argument("--min-compile-reduction", type=float, default=0.75,
+                    help="required compile_s reduction for --compare-cold "
+                         "(default 0.75 = 75%%; the warm residual is "
+                         "per-process jit tracing, which the persistent "
+                         "cache cannot remove)")
     args = ap.parse_args(argv)
     if args.tolerance <= 1.0 or args.hard_ratio < args.tolerance:
         ap.error("need --tolerance > 1.0 and --hard-ratio >= --tolerance")
+    for name in ("compile_tolerance", "execute_tolerance"):
+        if getattr(args, name) <= 1.0:
+            ap.error(f"need --{name.replace('_', '-')} > 1.0")
+    if not 0.0 < args.min_compile_reduction < 1.0:
+        ap.error("need 0 < --min-compile-reduction < 1")
 
     timing = load_record(pathlib.Path(args.timing))
     baseline_path = pathlib.Path(args.baseline)
 
     if args.write_baseline:
-        baseline_path.write_text(
-            json.dumps(baseline_from(timing), indent=1) + "\n")
-        print(f"[check_perf] wrote baseline {baseline_path} "
-              f"(total_s={timing['total_s']:.1f})")
-        return 0
+        return write_baseline(timing, baseline_path)
+
+    if args.compare_cold:
+        cold = load_record(pathlib.Path(args.compare_cold))
+        return compare_cold(timing, cold, args.min_compile_reduction)
 
     baseline = load_record(baseline_path)
     if grid_of(timing) != grid_of(baseline):
@@ -118,28 +245,17 @@ def main(argv=None) -> int:
               "(refresh with --write-baseline on the reference box)")
         return 2
 
-    base_s = float(baseline["total_s"])
-    got_s = float(timing["total_s"])
-    ratio = got_s / base_s if base_s > 0 else float("inf")
-    roof = timing.get("roofline") or {}
-    split = (f" (compile {roof['compile_s']:.1f}s / "
-             f"execute {roof['execute_s']:.1f}s)"
-             if "compile_s" in roof and "execute_s" in roof else "")
-    print(f"[check_perf] total_s {got_s:.1f} vs baseline {base_s:.1f} "
-          f"-> ratio {ratio:.2f} (tolerance {args.tolerance:.2f}, "
-          f"hard {args.hard_ratio:.2f}){split}")
-
-    if ratio > args.hard_ratio:
-        print(f"[check_perf] FAIL: {ratio:.2f}x exceeds the hard ratio "
-              f"{args.hard_ratio:.2f}x — regression (or stale baseline)")
-        return 1
-    if ratio > args.tolerance:
-        if args.warn_only:
-            print(f"[check_perf] WARN: {ratio:.2f}x exceeds tolerance "
-                  f"{args.tolerance:.2f}x (ignored: --warn-only)")
-            return 0
-        print(f"[check_perf] FAIL: {ratio:.2f}x exceeds tolerance "
-              f"{args.tolerance:.2f}x")
+    failed = check_ratio("total_s", float(timing["total_s"]),
+                         float(baseline["total_s"]), args.tolerance,
+                         args.hard_ratio, args.warn_only)
+    got_c, base_c = components_of(timing), components_of(baseline)
+    tolerances = {"compile_s": args.compile_tolerance,
+                  "execute_s": args.execute_tolerance}
+    for comp, tol in tolerances.items():
+        if comp in got_c and comp in base_c and base_c[comp] > 0:
+            failed |= check_ratio(comp, got_c[comp], base_c[comp], tol,
+                                  args.hard_ratio, args.warn_only)
+    if failed:
         return 1
     print("[check_perf] PASS")
     return 0

@@ -102,6 +102,7 @@ def fig_scenario_sensitivity(name: str, axis: str, values,
     it perturbs read side by side.
     """
     from repro.experiments import sweep_scenario_axis
+    from repro.experiments.report import axis_key
 
     spec = ExperimentSpec(workloads=(name,), scale=scale, engine=engine,
                           scenario=scenario or ScenarioConfig(), **spec_kw)
@@ -109,8 +110,54 @@ def fig_scenario_sensitivity(name: str, axis: str, values,
                                    cache_dir=cache_dir, verbose=False)
     table = render_scenario_table(
         axis, {v: res[name] for v, res in by_value.items()})
-    base = render_sweep_table(by_value[float(values[0])][name])
+    base = render_sweep_table(by_value[axis_key(values[0])][name])
     return table + "\n\n" + base
+
+
+def fig_strategy_comparison(name: str, scale: float = 0.05,
+                            seeds: int = 1, proportion: float = 1.0,
+                            strategies=None, engine: str = "des",
+                            scenario: ScenarioConfig | None = None,
+                            cache_dir: str | None = None) -> str:
+    """Strategy-comparison figure over the whole registry.
+
+    One workload, one malleable proportion, every sweepable registry
+    strategy — the paper's four malleable policies *and* the ported
+    ElastiSim ones (steal_agreement, pref_common_pool, rigid_sjf) —
+    rendered as per-metric bars against the rigid EASY baseline.
+    Lower is better for turnaround/wait; higher for utilization.
+    """
+    from repro.core.strategies import registered_strategy_names
+    from repro.experiments import run_experiment
+
+    strategies = tuple(strategies if strategies is not None
+                       else registered_strategy_names(sweepable_only=True))
+    spec = ExperimentSpec(workloads=(name,), scale=scale, seeds=seeds,
+                          proportions=(float(proportion),),
+                          strategies=strategies, engine=engine,
+                          scenario=scenario or ScenarioConfig())
+    results = run_experiment(spec, cache_dir=cache_dir, verbose=False)[name]
+    pct = int(proportion * 100)
+    rows = [("rigid", results["rigid"], "")]
+    rows += [(s, results.get(f"{s}@{pct}", {}), "_mean")
+             for s in strategies]
+    out = [f"== Strategy comparison: {name} at {pct}% malleable "
+           f"(scale {scale}, {seeds} seed(s), {engine} engine) =="]
+    for metric, better in (("turnaround_mean", "lower"),
+                           ("wait_mean", "lower"),
+                           ("utilization", "higher")):
+        vals = {label: r.get(metric + suffix, float("nan"))
+                for label, r, suffix in rows}
+        finite = [v for v in vals.values() if np.isfinite(v)]
+        top = max(finite) if finite else 1.0
+        out.append(f"  {metric} ({better} is better):")
+        for label, v in vals.items():
+            if np.isfinite(v):
+                out.append(f"    {label:<18}|{_bar(v / max(top, 1e-9))}| "
+                           f"{v:,.1f}")
+            else:
+                out.append(f"    {label:<18}|{_bar(0.0)}| -")
+    return "\n".join(out)
 
 
 def main():

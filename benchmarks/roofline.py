@@ -41,6 +41,16 @@ def sweep_roofline(engine_info: Dict) -> Dict:
                      * c.get("window", 0) for c in chunks)
     sched_steps = sum(c.get("sched_steps", 0) for c in chunks)
     compressed = sum(c.get("compressed_events", 0) for c in chunks)
+    # distinct chunk-kernel compile keys: chunks of one structure batch
+    # share keys (max), structure batches add kernels (sum) — mirrors
+    # backend_jax's aggregation, gated by tools/check_perf.py
+    variants_by_structure: Dict[str, int] = {}
+    for c in chunks:
+        s = str(c.get("structure", ""))
+        variants_by_structure[s] = max(
+            variants_by_structure.get(s, 0),
+            int(c.get("compile_variants", 0)))
+    compile_variants = sum(variants_by_structure.values())
     denom = execute if execute > 0 else wall
     bytes_touched = slot_steps * BYTES_PER_SLOT_STEP
     return {
@@ -67,6 +77,7 @@ def sweep_roofline(engine_info: Dict) -> Dict:
         "retraces": sum(c.get("retraces", 0) for c in chunks),
         "escalations": sum(c.get("escalations", 0) for c in chunks),
         "warm_hits": sum(c.get("warm_hits", 0) for c in chunks),
+        "compile_variants": compile_variants,
     }
 
 

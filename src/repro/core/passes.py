@@ -31,12 +31,15 @@ Three implementation families live here, matching the three substrates:
    backfill never delays the reserved queue head.  Consumed by ``sim_jax``
    (lane shape ``()``) and the batched sweep engine (lane shape ``(B,)``).
 
-Strategy *structure* (greedy vs. AVG-balanced) is a static argument;
-strategy *parameters* (start want/floor, shrink floor, priority reference)
-are data (:class:`PassParams`), so EASY/MIN/PREF/KEEPPREF share one
-compiled pass.  The greedy Step-3 expand optionally runs through the
-Pallas prefix-waterfill kernel (``repro.kernels.waterfill``) when
-``expand_backend`` is set — see :func:`schedule_tick`.
+Strategy *structure* (``greedy`` / ``balanced`` / ``pooled`` /
+``stealing``, plus the ``with_sjf`` queue-order flag) is a static
+argument; strategy *parameters* (start want/floor, shrink floor,
+priority reference, preferred allocation, pool share, steal margin,
+queue-order sort key) are data (:class:`PassParams` + per-lane scalars),
+so all registry strategies share one compiled pass per structure bucket
+(``docs/strategies.md``).  The greedy Step-3 expand optionally runs
+through the Pallas prefix-waterfill kernel (``repro.kernels.waterfill``)
+when ``expand_backend`` is set — see :func:`schedule_tick`.
 """
 from __future__ import annotations
 
@@ -75,8 +78,6 @@ def start_policies(strategy, malleable, mn, pref, req, xp=np):
     Non-malleable jobs (and every job under a rigid strategy) use their
     rigid request for all four.
     """
-    from .strategies import priority_min  # local: avoid import cycle
-
     if not strategy.malleable:
         return req, req, req, req
 
@@ -86,7 +87,7 @@ def start_policies(strategy, malleable, mn, pref, req, xp=np):
     want = xp.where(malleable, pick(strategy.start_want), req)
     floor = xp.where(malleable, pick(strategy.start_floor), req)
     sfloor = xp.where(malleable, pick(strategy.shrink_floor), req)
-    prio_ref = pick("min" if strategy.priority is priority_min else "pref")
+    prio_ref = pick("min" if strategy.priority == "min" else "pref")
     return want, floor, sfloor, prio_ref
 
 
@@ -281,7 +282,10 @@ class PassParams(NamedTuple):
     ``on_demand`` marks queue-priority jobs (Fan & Lan hybrid workloads):
     any queued on-demand job outranks every non-on-demand queued job,
     regardless of submit order; it is only consulted when
-    :func:`schedule_tick` runs with ``with_classes=True``.
+    :func:`schedule_tick` runs with ``with_classes=True``.  ``pref_nodes``
+    (the preferred allocation) is only consulted by the ``pooled``
+    structure, and ``sort_key`` (the queue-order key: submit rank under
+    FCFS, walltime estimate under SJF) only under ``with_sjf=True``.
     """
 
     malleable: object   # bool — resizable under the lane's strategy
@@ -293,7 +297,9 @@ class PassParams(NamedTuple):
     prio_ref: object    # i32 greedy priority = alloc - prio_ref (Eqs. 1-2)
     pfrac: object       # f32 Amdahl parallel fraction
     wall_work: object   # f32 walltime * S(nodes_req)
-    on_demand: object = None  # bool — queue-priority class (optional)
+    on_demand: object = None   # bool — queue-priority class (optional)
+    pref_nodes: object = None  # i32 preferred allocation ([pooled] only)
+    sort_key: object = None    # f32 queue-order key ([with_sjf] only)
 
 
 def _speedup_f32(n, p):
@@ -337,6 +343,24 @@ def queue_ranks(queued, on_demand=None):
     return jnp.where(on_demand, jnp.cumsum(q_od, axis=-1),
                      n_od[..., None] + jnp.cumsum(queued & ~on_demand,
                                                   axis=-1))
+
+
+def queue_cumsum(amount, mask, on_demand=None):
+    """Cumulative ``amount`` over ``mask`` slots in *queue order*.
+
+    Without classes the queue order is slot (FCFS/permuted-SJF) order;
+    with classes every on-demand slot accumulates before any normal one,
+    so cumulative-fit admission follows the same (class, queue-rank)
+    order the DES scans (prefix semantics within that order).
+    """
+    jnp = _jnp()
+    if on_demand is None:
+        return jnp.cumsum(jnp.where(mask, amount, 0), axis=-1)
+    a_od = jnp.where(mask & on_demand, amount, 0)
+    a_n = jnp.where(mask & ~on_demand, amount, 0)
+    return jnp.where(
+        on_demand, jnp.cumsum(a_od, axis=-1),
+        jnp.sum(a_od, axis=-1, keepdims=True) + jnp.cumsum(a_n, axis=-1))
 
 
 def take_desc_prefix(prio, amount, need, lo0: int, hi0: int):
@@ -415,12 +439,15 @@ def shadow_reservation(est, release, free, head_floor,
 
 
 def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
-                  capacity, t_now, *, balanced: bool, fill_rounds: int,
+                  capacity, t_now, *, structure: str = "greedy",
+                  fill_rounds: int,
                   prio_lo: int, prio_hi: int, span_max: int,
                   shadow_iters: int = SHADOW_ITERS,
                   expand_backend: str = "bisect",
-                  backfill_depth=None, with_classes: bool = False):
-    """One Steps-1..3 scheduling pass on FCFS-ordered slot arrays.
+                  backfill_depth=None, with_classes: bool = False,
+                  with_sjf: bool = False, pool_share=None,
+                  steal_margin=None):
+    """One Steps-1..3 scheduling pass on queue-ordered slot arrays.
 
     Pure and fixed-shape: works under jit/vmap/scan for lane shapes ``()``
     (sim_jax) and ``(B,)`` (the batched sweep engine).  ``act`` masks slots
@@ -439,12 +466,26 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
          snapshot at scan entry — the same bound the DES applies by
          slicing its queue); ``None`` leaves the scan unbounded.
       2. Shrink running malleable jobs (greedy highest-priority-first, or
-         AVG-balanced when ``balanced``) to admit the head.
+         AVG-balanced when ``structure == 'balanced'``) to admit the head.
+      2b. Structure-specific extra pass (``docs/strategies.md``):
+         ``pooled`` starts queued malleable candidates from the shared
+         surplus-above-preferred pool; ``stealing`` transfers nodes from
+         over-average running jobs to under-average ones.
       3. Expand running malleable jobs into remaining idle nodes (greedy
          lowest-priority-first or balanced).  With
          ``expand_backend='pallas'`` (or ``'pallas-interpret'`` off-TPU)
          the greedy give runs through the Pallas prefix-waterfill kernel
          in sorted priority order instead of the threshold bisection.
+
+    ``with_sjf`` (static) enables queue-order generality: slots are
+    permuted by ``p.sort_key`` (stable argsort) before the pass and
+    unpermuted after, so the FCFS-prefix/backfill/head machinery above
+    runs over the *reordered* queue — SJF lanes key on walltime
+    estimates, FCFS lanes on submit rank.  An FCFS lane's key is
+    monotone over its slots, so its permutation is the identity and an
+    FCFS lane inside a ``with_sjf`` compilation is bit-identical to the
+    ``with_sjf=False`` pass (mixed batches share one compilation; an
+    all-FCFS batch compiles the flag away entirely).
 
     ``with_classes`` (static) enables workload-class queue priority:
     ``p.on_demand`` slots outrank every non-on-demand queued slot, so the
@@ -467,8 +508,37 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
     """
     import jax
     jnp = _jnp()
-    if (expand_backend in ("fused", "fused-interpret") and not balanced
-            and not with_classes):
+    if structure not in ("greedy", "balanced", "pooled", "stealing"):
+        raise ValueError(f"unknown pass structure {structure!r}")
+    balanced = structure == "balanced"
+    if with_sjf:
+        # Queue-order permutation wrapper: run the pass over slots sorted
+        # by the per-slot queue key, then restore slot order.  The stable
+        # argsort keeps ties in slot (submit) order, matching the DES's
+        # stable insertion.
+        perm = jnp.argsort(p.sort_key, axis=-1)
+        inv = jnp.argsort(perm, axis=-1)
+
+        def fwd(a):
+            return jnp.take_along_axis(a, perm, axis=-1)
+
+        p_q = PassParams(*(fwd(f) if f is not None else None for f in p))
+        st_q, al_q, s0_q = schedule_tick(
+            p_q, fwd(state), fwd(alloc), fwd(remaining), fwd(start_t),
+            fwd(jnp.broadcast_to(act, state.shape)), capacity, t_now,
+            structure=structure, fill_rounds=fill_rounds,
+            prio_lo=prio_lo, prio_hi=prio_hi, span_max=span_max,
+            shadow_iters=shadow_iters, expand_backend=expand_backend,
+            backfill_depth=backfill_depth, with_classes=with_classes,
+            with_sjf=False, pool_share=pool_share,
+            steal_margin=steal_margin)
+
+        def rev(a):
+            return jnp.take_along_axis(a, inv, axis=-1)
+
+        return rev(st_q), rev(al_q), rev(s0_q)
+    if (expand_backend in ("fused", "fused-interpret")
+            and structure == "greedy" and not with_classes):
         # the whole greedy/class-free pass as one VMEM-resident Pallas
         # kernel (repro.kernels.schedule_tick); balanced / class lanes
         # keep the reference pass below
@@ -557,19 +627,7 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
                           jnp.where(has_head, free - hfloor, free))
 
         def qcumsum(amount, mask):
-            # cumulative amounts in *queue order*: without classes this is
-            # slot (FCFS) order; with classes every on-demand candidate
-            # accumulates before any normal one, so cumulative-fit
-            # admission follows the same (class, submit-rank) order the
-            # DES scans (prefix semantics within that order)
-            if od is None:
-                return jnp.cumsum(jnp.where(mask, amount, 0), axis=-1)
-            a_od = jnp.where(mask & od, amount, 0)
-            a_n = jnp.where(mask & ~od, amount, 0)
-            return jnp.where(
-                od, jnp.cumsum(a_od, axis=-1),
-                jnp.sum(a_od, axis=-1, keepdims=True)
-                + jnp.cumsum(a_n, axis=-1))
+            return queue_cumsum(amount, mask, od)
 
         tfit = t_now[..., None] + p.wall_work / _speedup_f32(
             p.want, p.pfrac) <= shadow[..., None] + _SHADOW_EPS
@@ -654,6 +712,84 @@ def schedule_tick(p: PassParams, state, alloc, remaining, start_t, act,
     state = jnp.where(h_upd, RUNNING, state)
     start_t = jnp.where(h_upd, t_now[..., None], start_t)
     free = free - jnp.where(h_ok, h_alloc, 0)
+
+    # -- Step 2b: structure-specific extra pass ---------------------------
+    if structure == "pooled":
+        # Common-pool start pass (docs/strategies.md § pref_common_pool):
+        # running malleable jobs' surplus above their preferred
+        # allocation forms a shared pool; queued malleable candidates
+        # behind the head draw their floor from it in queue order
+        # (prefix semantics: the first non-fitting malleable candidate
+        # blocks the rest, like the DES scan).  The pool never touches
+        # free nodes, so the head's shadow reservation is unaffected,
+        # and every pool start is paid for by shrinking donors back
+        # toward preferred — busy is conserved by construction.
+        run_m = (state == RUNNING) & p.malleable
+        over_pref = jnp.where(run_m,
+                              jnp.maximum(alloc - p.pref_nodes, 0), 0)
+        pool_amt = jnp.sum(over_pref, axis=-1)
+        share = pool_share if pool_share is not None else 1.0
+        budget = jnp.minimum((share * pool_amt).astype(pool_amt.dtype),
+                             pool_amt)
+        q_pool = (state == QUEUED) & act
+        h_pool = priority_head(q_pool, od) if with_classes else \
+            first_true(q_pool)
+        cand = q_pool & p.malleable & ~h_pool
+        cumf = queue_cumsum(p.floor, cand, od)
+        sp = cand & (cumf <= budget[..., None])
+        taken = jnp.max(jnp.where(sp, cumf, 0), axis=-1)
+
+        def pool_start(args):
+            state, alloc, start_t = args
+            pr = jnp.clip(alloc - p.prio_ref, prio_lo, prio_hi)
+            take = take_desc_prefix(pr, over_pref, taken,
+                                    prio_lo - 1, prio_hi)
+            alloc = alloc - take
+            alloc = jnp.where(sp, p.floor, alloc)
+            state = jnp.where(sp, RUNNING, state)
+            start_t = jnp.where(sp, t_now[..., None], start_t)
+            return state, alloc, start_t
+
+        state, alloc, start_t = jax.lax.cond(
+            jnp.any(taken > 0), pool_start, lambda a: a,
+            (state, alloc, start_t))
+
+    if structure == "stealing":
+        # Steal-agreement pass (docs/strategies.md § steal_agreement):
+        # running malleable jobs above the average running allocation
+        # (plus the per-lane steal margin) donate their surplus above
+        # max(average, shrink floor); starved under-average jobs steal
+        # up to min(average, max_nodes).  The transfer is min(donatable,
+        # stealable), taken highest-priority-first and given
+        # lowest-priority-first — busy is conserved, and repeated
+        # application converges (donors land on the average).
+        run_m = (state == RUNNING) & p.malleable
+        n_run = jnp.sum(run_m, axis=-1)
+        avg = (jnp.sum(jnp.where(run_m, alloc, 0), axis=-1)
+               // jnp.maximum(n_run, 1))
+        margin = steal_margin if steal_margin is not None else 0
+        sfl = jnp.where(run_m, jnp.minimum(p.shrink_floor, alloc), alloc)
+        donor = run_m & (alloc > (avg + margin)[..., None])
+        donor_amt = jnp.where(
+            donor,
+            jnp.maximum(alloc - jnp.maximum(avg[..., None], sfl), 0), 0)
+        taker_room = jnp.where(
+            run_m,
+            jnp.maximum(jnp.minimum(avg[..., None], p.max_nodes) - alloc,
+                        0), 0)
+        transfer = jnp.minimum(jnp.sum(donor_amt, axis=-1),
+                               jnp.sum(taker_room, axis=-1))
+
+        def steal(alloc):
+            pr = jnp.clip(alloc - p.prio_ref, prio_lo, prio_hi)
+            take = take_desc_prefix(pr, donor_amt, transfer,
+                                    prio_lo - 1, prio_hi)
+            give = give_asc_prefix(pr, taker_room, transfer,
+                                   prio_lo - 1, prio_hi)
+            return alloc - take + give
+
+        alloc = jax.lax.cond(jnp.any(transfer > 0), steal, lambda a: a,
+                             alloc)
 
     # -- Step 3: expand into remaining idle nodes -------------------------
     expandable = (state == RUNNING) & p.malleable

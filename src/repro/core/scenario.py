@@ -43,6 +43,16 @@ sweepable:
     (:func:`repro.core.passes.schedule_tick` masks candidates past the
     depth'th queue rank; the DES slices its queue).
 
+  * **Queue order** (``fcfs`` | ``sjf``): the order waiting jobs are
+    scanned in.  ``sjf`` keys the queue on *walltime estimates* (so it
+    composes with the walltime-accuracy axes above and with EASY's
+    estimate-driven reservation), reordering the queue the FCFS prefix,
+    head reservation and depth-bounded backfill scan all walk — in every
+    engine (the DES inserts into a sorted queue, the vectorized passes
+    permute slots by a per-lane sort key).  A strategy that pins its own
+    order (``rigid_sjf``) overrides the axis per lane
+    (:func:`repro.core.strategies.effective_queue_order`).
+
   * **Job classes** (Fan & Lan hybrid workloads): :class:`JobClasses`
     partitions the trace into *rigid* (pinned rigid, normal queue rank),
     *on-demand* (pinned rigid + queue priority over every non-on-demand
@@ -109,11 +119,16 @@ class ScenarioConfig:
     arrival_compression: float = 1.0   # divides submit times (>1 = burstier)
     backfill_depth: int = DEFAULT_BACKFILL_DEPTH
     job_classes: JobClasses = JobClasses()
+    queue_order: str = "fcfs"          # fcfs | sjf (walltime-keyed)
 
     def __post_init__(self) -> None:
         if isinstance(self.job_classes, dict):  # JSON round-trips
             object.__setattr__(self, "job_classes",
                                JobClasses(**self.job_classes))
+        if self.queue_order not in ("fcfs", "sjf"):
+            raise ValueError(f"unknown queue_order "
+                             f"{self.queue_order!r}; choose from "
+                             f"('fcfs', 'sjf')")
         if self.walltime_factor < 0.0:
             raise ValueError("walltime_factor must be >= 0")
         if self.walltime_jitter < 0.0:

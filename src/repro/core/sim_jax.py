@@ -37,7 +37,7 @@ from .jobs import DONE, PENDING, QUEUED, RUNNING, Workload
 from .passes import (PassParams, _speedup_f32 as _speedup, schedule_tick,
                      start_policies)
 from .scenario import DEFAULT_BACKFILL_DEPTH
-from .strategies import Strategy
+from .strategies import Strategy, effective_queue_order
 
 
 class JobArrays(NamedTuple):
@@ -98,7 +98,7 @@ class SimTrace(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("strategy", "capacity", "tick", "n_ticks",
-                     "with_classes"),
+                     "with_classes", "queue_order"),
 )
 def simulate_scan(
     jobs: JobArrays,
@@ -108,6 +108,7 @@ def simulate_scan(
     n_ticks: int,
     backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
     with_classes: bool = False,
+    queue_order: str = "fcfs",
 ) -> Tuple[SimState, SimTrace]:
     """Run ``n_ticks`` scheduler ticks; returns final state + per-tick trace."""
     n = jobs.submit.shape[0]
@@ -119,12 +120,15 @@ def simulate_scan(
         strategy, sj.malleable, sj.min_nodes, sj.pref_nodes, sj.nodes_req,
         xp=jnp)
     s_ref = _speedup(sj.nodes_req, sj.pfrac)
+    with_sjf = effective_queue_order(strategy, queue_order) == "sjf"
     params = PassParams(
         malleable=sj.malleable & bool(strategy.malleable),
         min_nodes=sj.min_nodes, max_nodes=sj.max_nodes,
         want=want, floor=floor, shrink_floor=sfloor, prio_ref=prio_ref,
         pfrac=sj.pfrac, wall_work=sj.walltime * s_ref,
         on_demand=sj.on_demand,
+        pref_nodes=sj.pref_nodes,
+        sort_key=sj.walltime if with_sjf else None,
     )
     depth = jnp.asarray(backfill_depth, jnp.int32)
     # conservative static pass bounds: every allocation and priority
@@ -165,10 +169,13 @@ def simulate_scan(
         state, alloc, start_t = schedule_tick(
             params, state, alloc, remaining, st.start_t, True,
             jnp.int32(capacity), t,
-            balanced=bool(strategy.malleable and strategy.balanced),
+            structure=(strategy.structure if strategy.malleable
+                       else "greedy"),
             fill_rounds=2, prio_lo=prio_lo, prio_hi=prio_hi,
             span_max=span_max, backfill_depth=depth,
-            with_classes=with_classes)
+            with_classes=with_classes, with_sjf=with_sjf,
+            pool_share=jnp.float32(strategy.pool_share),
+            steal_margin=jnp.int32(strategy.steal_margin))
 
         # 5. net per-tick op accounting (jobs running before & after)
         still = running0 & (state == RUNNING)
@@ -189,28 +196,32 @@ def simulate_scan(
 
 def simulate_jax(workload: Workload, capacity: int, tick: float,
                  n_ticks: int, strategy: Strategy,
-                 backfill_depth: int = DEFAULT_BACKFILL_DEPTH
+                 backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
+                 queue_order: str = "fcfs",
                  ) -> Tuple[SimState, SimTrace]:
     """Convenience wrapper: Workload -> device arrays -> scan."""
     return simulate_scan(JobArrays.from_workload(workload), strategy,
                          int(capacity), float(tick), int(n_ticks),
                          backfill_depth,
-                         with_classes=bool(np.any(workload.on_demand)))
+                         with_classes=bool(np.any(workload.on_demand)),
+                         queue_order=queue_order)
 
 
 @functools.lru_cache(maxsize=None)
 def _batched_sim(strategy: Strategy, capacity: int, tick: float,
-                 n_ticks: int, with_classes: bool):
+                 n_ticks: int, with_classes: bool, queue_order: str):
     """One jitted vmap of :func:`simulate_scan` per static configuration."""
     return jax.jit(jax.vmap(
         lambda jobs, depth: simulate_scan(jobs, strategy, capacity, tick,
                                           n_ticks, depth,
-                                          with_classes=with_classes)))
+                                          with_classes=with_classes,
+                                          queue_order=queue_order)))
 
 
 def simulate_scan_batch(jobs: JobArrays, strategy: Strategy, capacity: int,
                         tick: float, n_ticks: int,
-                        backfill_depth=None) -> Tuple[SimState, SimTrace]:
+                        backfill_depth=None,
+                        queue_order: str = "fcfs") -> Tuple[SimState, SimTrace]:
     """Batched entry point: ``jobs`` fields are (B, n); one lane per variant.
 
     The strategy axis stays static (one jit per strategy); proportion/seed
@@ -227,4 +238,5 @@ def simulate_scan_batch(jobs: JobArrays, strategy: Strategy, capacity: int,
         jnp.asarray(backfill_depth, jnp.int32), (B,))
     with_classes = bool(jnp.any(jobs.on_demand))
     return _batched_sim(strategy, int(capacity), float(tick),
-                        int(n_ticks), with_classes)(jobs, depth)
+                        int(n_ticks), with_classes,
+                        str(queue_order))(jobs, depth)

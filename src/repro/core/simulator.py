@@ -13,8 +13,16 @@ Scheduling per invocation (paper §2.1):
   Step 2  While the queue head cannot start and running malleable jobs can be
           shrunk enough to admit it: shrink (greedy in priority order, or
           balanced for AVG) and start.
+  Step 2b Structure-specific extra pass (``docs/strategies.md``): the
+          ``pooled`` structure starts queued malleable jobs from the
+          shared surplus-above-preferred pool; ``stealing`` transfers
+          nodes from over-average running jobs to under-average ones.
   Step 3  Expand running malleable jobs into any remaining idle nodes
           (greedy lowest-priority-first, or balanced for AVG).
+
+The queue itself is kept in ``(class, queue-key, submit)`` order, where the
+queue key is the submit rank under FCFS and the walltime estimate under SJF
+(``queue_order='sjf'`` or a strategy that pins it, e.g. ``rigid_sjf``).
 
 Expand/shrink operations are counted as the *net* per-invocation allocation
 change of each running malleable job, matching ElastiSim's one-reconfiguration
@@ -37,7 +45,7 @@ from .passes import (balanced_expand, balanced_shrink,
                      start_policies)
 from .scenario import DEFAULT_BACKFILL_DEPTH
 from .speedup import amdahl_speedup
-from .strategies import Strategy
+from .strategies import Strategy, effective_queue_order
 
 _EPS = 1e-9
 
@@ -103,12 +111,14 @@ class Simulator:
         strategy: Strategy,
         backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
         dense_ticks: bool = False,
+        queue_order: str = "fcfs",
     ):
         workload.validate(cluster.nodes)
         self.w = workload
         self.cluster = cluster
         self.strategy = strategy
         self.backfill_depth = backfill_depth
+        self.queue_order = effective_queue_order(strategy, queue_order)
         self.dense_ticks = dense_ticks  # force per-tick scheduling (tests)
         w = workload
         self._s_ref = amdahl_speedup(w.nodes_req, w.pfrac)
@@ -149,13 +159,30 @@ class Simulator:
         od = w.on_demand
         has_od = bool(np.any(od))
 
+        sjf = self.queue_order == "sjf"
+
         def enqueue(j: int) -> None:
             # On-demand jobs take queue priority (Fan & Lan): an arriving
             # on-demand job is inserted behind the queued on-demand jobs
             # but ahead of every normal one, so the queue stays in
             # (class, submit) order and the FCFS machinery below —
             # prefix, head reservation, backfill slice — needs no change.
-            if has_od and od[j]:
+            # Under SJF queue ordering the same trick applies one level
+            # deeper: stable insertion keeps the queue in
+            # (class, walltime estimate, submit) order, so shorter jobs
+            # overtake longer ones while equal estimates stay FCFS.
+            if sjf:
+                key = (0 if (has_od and od[j]) else 1, float(w.walltime[j]))
+                pos = 0
+                for q in queue:
+                    kq = (0 if (has_od and od[q]) else 1,
+                          float(w.walltime[q]))
+                    if kq <= key:  # stable: equal keys keep submit order
+                        pos += 1
+                    else:
+                        break
+                queue.insert(pos, j)
+            elif has_od and od[j]:
                 queue.insert(sum(1 for q in queue if od[q]), j)
             else:
                 queue.append(j)
@@ -260,6 +287,81 @@ class Simulator:
             alloc[m_ids] = new_alloc_m
             busy += int(delta.sum())
 
+        def _running_malleable() -> np.ndarray:
+            ids = running.ids
+            return ids[w.malleable[ids]]
+
+        def _priority_of(m: np.ndarray) -> np.ndarray:
+            return strat.priority_fn(alloc[m], w.min_nodes[m],
+                                     w.max_nodes[m], w.pref_nodes[m], np)
+
+        def pooled_pass() -> None:
+            # Common-pool start (docs/strategies.md § pref_common_pool):
+            # the surplus above preferred allocations of running malleable
+            # jobs forms a shared pool; queued malleable candidates behind
+            # the head draw their start floor from it in queue order, the
+            # first non-fitting malleable candidate blocking the rest.
+            # Pool draws never touch free nodes (the head's reservation is
+            # unaffected): every start is paid for by shrinking donors back
+            # toward preferred.
+            m = _running_malleable()
+            if len(m) == 0:
+                return
+            over = np.maximum(alloc[m] - w.pref_nodes[m], 0)
+            pool = int(over.sum())
+            budget = min(int(strat.pool_share * pool), pool)
+            if budget <= 0:
+                return
+            started, acc = [], 0
+            for qi, j in enumerate(list(queue)):
+                if qi == 0:
+                    continue  # head starts via reservation + Step 2 only
+                if not w.malleable[j]:
+                    continue
+                f = int(start_floor[j])
+                if acc + f > budget:
+                    break
+                acc += f
+                started.append(j)
+            if acc <= 0:
+                return
+            pr = _priority_of(m)
+            new_alloc = greedy_shrink(alloc[m], alloc[m] - over, pr, acc,
+                                      xp=np)
+            resize_running(new_alloc, m)
+            sset = set(started)
+            remain = [j for j in queue if j not in sset]
+            queue.clear()
+            queue.extend(remain)
+            for j in started:
+                do_start(j, int(start_floor[j]))
+
+        def stealing_pass() -> None:
+            # Steal-agreement (docs/strategies.md § steal_agreement):
+            # running malleable jobs above the average running allocation
+            # (plus the steal margin) donate their surplus above
+            # max(average, shrink floor); under-average jobs steal up to
+            # min(average, max_nodes).  Busy is conserved.
+            m = _running_malleable()
+            if len(m) == 0:
+                return
+            avg = int(alloc[m].sum()) // len(m)
+            sfl = np.minimum(shrink_floor[m], alloc[m])
+            donor = alloc[m] > avg + strat.steal_margin
+            donor_amt = np.where(
+                donor, np.maximum(alloc[m] - np.maximum(avg, sfl), 0), 0)
+            taker_room = np.maximum(
+                np.minimum(avg, w.max_nodes[m]) - alloc[m], 0)
+            transfer = int(min(donor_amt.sum(), taker_room.sum()))
+            if transfer <= 0:
+                return
+            pr = _priority_of(m)
+            new_alloc = greedy_shrink(alloc[m], alloc[m] - donor_amt, pr,
+                                      transfer, xp=np)
+            new_alloc = greedy_expand(new_alloc, new_alloc + taker_room, pr,
+                                      transfer, xp=np)
+            resize_running(new_alloc, m)
+
         def schedule_once() -> None:
             nonlocal busy
             start_pass()
@@ -284,12 +386,19 @@ class Simulator:
                         new_alloc = balanced_shrink(
                             alloc[m], floor_arr, w.max_nodes[m], deficit, xp=np)
                     else:
-                        pr = strat.priority(alloc[m], w.min_nodes[m],
-                                            w.max_nodes[m], w.pref_nodes[m], np)
+                        pr = strat.priority_fn(alloc[m], w.min_nodes[m],
+                                               w.max_nodes[m],
+                                               w.pref_nodes[m], np)
                         new_alloc = greedy_shrink(alloc[m], floor_arr, pr,
                                                   deficit, xp=np)
                     resize_running(new_alloc, m)
                     start_pass()
+                # Step 2b: structure-specific extra pass (see
+                # docs/strategies.md and the jax mirror in passes.py).
+                if strat.structure == "pooled":
+                    pooled_pass()
+                elif strat.structure == "stealing":
+                    stealing_pass()
                 # Step 3: expand running malleable jobs into idle nodes.
                 free = cl.nodes - busy
                 ids = running.ids
@@ -301,8 +410,9 @@ class Simulator:
                         new_alloc = balanced_expand(
                             alloc[m], w.min_nodes[m], w.max_nodes[m], free, xp=np)
                     else:
-                        pr = strat.priority(alloc[m], w.min_nodes[m],
-                                            w.max_nodes[m], w.pref_nodes[m], np)
+                        pr = strat.priority_fn(alloc[m], w.min_nodes[m],
+                                               w.max_nodes[m],
+                                               w.pref_nodes[m], np)
                         new_alloc = greedy_expand(alloc[m], w.max_nodes[m], pr,
                                                   free, xp=np)
                     resize_running(new_alloc, m)

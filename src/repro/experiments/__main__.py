@@ -31,7 +31,7 @@ import pathlib
 from .cli import (add_backend_arguments, add_spec_arguments,
                   backend_options_from_args, configure_observability,
                   flush_observability, spec_from_args)
-from .report import (SCENARIO_AXES, best_improvements,
+from .report import (SCENARIO_AXES, axis_key, best_improvements,
                      render_scenario_table, render_sweep_table)
 from .run import run_experiment, sweep_scenario_axis, write_artifact
 
@@ -61,9 +61,10 @@ def main(argv=None, prog=None, epilog=None) -> int:
                     help="sweep one scenario axis across the strategy "
                          "grid and render the sensitivity table "
                          f"(axes: {', '.join(SCENARIO_AXES)})")
-    ap.add_argument("--scenario-values", type=float, nargs="+",
+    ap.add_argument("--scenario-values", type=axis_key, nargs="+",
                     default=None,
-                    help="values of the swept --compare-scenarios axis")
+                    help="values of the swept --compare-scenarios axis "
+                         "(numbers, or fcfs/sjf for queue_order)")
     ap.add_argument("--out", default="",
                     help="artifact path; with several workloads one file "
                          "holding {results: {workload: ...}} is written "
@@ -154,20 +155,20 @@ def compare_scenarios(spec, args) -> int:
         cache_dir=args.cache_dir or None,
         backend_options=backend_options_from_args(args),
         verbose=False)
-    base_value = args.scenario_values[0]
+    base_value = axis_key(args.scenario_values[0])
     for name in spec.workloads:
         print(render_scenario_table(
             axis, {v: res[name] for v, res in by_value.items()}))
         print()
-        print(render_sweep_table(by_value[float(base_value)][name]))
+        print(render_sweep_table(by_value[base_value][name]))
         print()
     if args.out:
         out = pathlib.Path(args.out)
         out.parent.mkdir(parents=True, exist_ok=True)
         payload = {
             "axis": axis,
-            "values": [float(v) for v in args.scenario_values],
-            "results": {str(float(v)): res
+            "values": [axis_key(v) for v in args.scenario_values],
+            "results": {str(axis_key(v)): res
                         for v, res in by_value.items()},
             "tables": {name: render_scenario_table(
                 axis, {v: res[name] for v, res in by_value.items()})

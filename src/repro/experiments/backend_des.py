@@ -56,7 +56,8 @@ def simulate_cell(spec: ExperimentSpec, name: str,
           transform_rigid_to_malleable(w_rigid, prop, seed, cl.nodes,
                                        spec.transform))
     res = simulate(wm, cl, get_strategy(strat),
-                   backfill_depth=spec.scenario.backfill_depth)
+                   backfill_depth=spec.scenario.backfill_depth,
+                   queue_order=spec.scenario.queue_order)
     return {**run_metrics(res, wm, cl, window),
             **scheduling_counters(res, wm)}
 

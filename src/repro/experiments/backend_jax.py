@@ -2,9 +2,11 @@
 
 Adapter between the declarative experiment layer and the batched
 device-resident engine (:mod:`repro.sweep.batch`): cells become fixed-shape
-lanes, greedy-structured strategies (EASY/MIN/PREF/KEEPPREF) share one
-engine batch and one compilation, AVG runs in a second balanced batch, and
-lanes of *different* workloads pad-stack into the same batch
+lanes grouped by static pass structure — greedy-structured strategies
+(EASY/MIN/PREF/KEEPPREF/rigid_sjf) share one engine batch and one
+compilation, while AVG (balanced), pref_common_pool (pooled) and
+steal_agreement (stealing) each add one more batch only when present —
+and lanes of *different* workloads pad-stack into the same batch
 (:func:`repro.sweep.batch.concat_lanes`) so a single compilation serves all
 four supercomputer grids.  Per-cell metrics come back through
 :mod:`repro.sweep.metrics_jax`; only lanes that ran to completion are
@@ -98,20 +100,23 @@ def run_cells(spec: ExperimentSpec,
     names = [n for n in spec.workloads if any(n == m for m, _ in todo)]
     wls = {name: prepare_workload(spec, name) for name in names}
 
-    groups = {
-        False: [k for k in todo if not get_strategy(k[1][0]).balanced],
-        True: [k for k in todo if get_strategy(k[1][0]).balanced],
-    }
+    # one engine batch per static pass structure (greedy / balanced /
+    # pooled / stealing); non-malleable lanes (easy, rigid_sjf) are pure
+    # data and ride the greedy batch with everything else greedy-shaped
+    groups: Dict[str, List[Tuple[str, Cell]]] = {}
+    for k in todo:
+        groups.setdefault(get_strategy(k[1][0]).structure, []).append(k)
     t0 = time.monotonic()
     metrics: Dict[Tuple[str, Cell], Dict[str, float]] = {}
     info: Dict[str, object] = {"incomplete": [], "chunks": [],
                                "chunk_lanes": shard.chunk_lanes,
                                "peak_lane_width": 0,
                                "compile_s": 0.0, "execute_s": 0.0,
+                               "compile_variants": 0,
                                "retraces": 0, "escalations": 0,
                                "warm_hits": 0, "compressed_events": 0,
                                "sched_steps": 0}
-    for balanced, group in groups.items():
+    for structure, group in groups.items():
         if not group:
             continue
         batches, t0s, t1s, caps = [], [], [], []
@@ -124,7 +129,8 @@ def run_cells(spec: ExperimentSpec,
             batch, _order = build_lanes(
                 w_rigid, cl.nodes, lanes, config=spec.transform,
                 tick=cl.tick,
-                backfill_depth=spec.scenario.backfill_depth)
+                backfill_depth=spec.scenario.backfill_depth,
+                queue_order=spec.scenario.queue_order)
             batches.append(batch)
             t0s += [window.t0] * len(lanes)
             t1s += [window.t1] * len(lanes)
@@ -132,7 +138,7 @@ def run_cells(spec: ExperimentSpec,
         big = concat_lanes(batches) if len(batches) > 1 else batches[0]
         win0, win1 = np.asarray(t0s), np.asarray(t1s)
         caps_arr = np.asarray(caps)
-        cfg = EngineConfig(balanced=balanced,
+        cfg = EngineConfig(structure=structure,
                            window=int(opts.get("window", 0)),
                            chunk=int(opts.get("chunk", 160)),
                            max_steps_factor=int(
@@ -141,7 +147,7 @@ def run_cells(spec: ExperimentSpec,
                                                    "bisect"),
                            events=int(opts.get("events", 4)),
                            aot_warmup=bool(opts.get("aot_warmup", True)))
-        tag = "balanced" if balanced else "greedy"
+        tag = structure
         plan = describe_plan(big.n_lanes, shard)
         if verbose:
             if plan["chunks"] > 1 or plan["devices"] > 1:
@@ -153,6 +159,7 @@ def run_cells(spec: ExperimentSpec,
             plan["chunks"], label=f"progress:{'+'.join(names)}:{tag}",
             unit="chunk", enabled=bool(opts.get("progress")))
         steps_total, window_peak, budget_cut = 0, 0, False
+        variants_peak = 0  # chunks of one structure share compile keys
         for ch in simulate_lanes_chunked(big, cfg, shard, verbose=verbose):
             res = ch.results
             per_lane = batched_metrics(
@@ -194,6 +201,7 @@ def run_cells(spec: ExperimentSpec,
                 "window": int(res["window"]),
                 "compile_s": float(res["compile_s"]),
                 "execute_s": float(res["execute_s"]),
+                "compile_variants": int(res.get("compile_variants", 0)),
                 "retraces": int(res["retraces"]),
                 "escalations": int(res["escalations"]),
                 "warm_hits": int(res["warm_hits"]),
@@ -202,6 +210,8 @@ def run_cells(spec: ExperimentSpec,
             })
             info["compile_s"] += float(res["compile_s"])
             info["execute_s"] += float(res["execute_s"])
+            variants_peak = max(variants_peak,
+                                int(res.get("compile_variants", 0)))
             info["retraces"] += int(res["retraces"])
             info["escalations"] += int(res["escalations"])
             info["warm_hits"] += int(res["warm_hits"])
@@ -214,6 +224,9 @@ def run_cells(spec: ExperimentSpec,
         info[f"{tag}_lanes"] = len(group)
         info[f"{tag}_steps"] = steps_total
         info[f"{tag}_window"] = window_peak
+        # distinct chunk-kernel configs across the run: chunks within one
+        # structure batch share keys (max), structures add batches (sum)
+        info["compile_variants"] += variants_peak
         if budget_cut:
             print(f"[experiment-jax:{'+'.join(names)}] WARNING: {tag} batch "
                   "hit the step budget with unfinished lanes")

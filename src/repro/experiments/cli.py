@@ -14,7 +14,8 @@ from repro.core.scenario import (DEFAULT_BACKFILL_DEPTH,
                                  DEFAULT_WALLTIME_SEED, WALLTIME_DISTS,
                                  JobClasses, ScenarioConfig)
 from repro.core.strategies import (MALLEABLE_STRATEGY_NAMES,
-                                   SWEEP_PROPORTIONS)
+                                   SWEEP_PROPORTIONS,
+                                   registered_strategy_names)
 
 from .spec import ENGINES, ExperimentSpec
 
@@ -42,9 +43,13 @@ def add_spec_arguments(ap: argparse.ArgumentParser, *,
                     help="transform seeds per (strategy, proportion)")
     ap.add_argument("--proportions", type=float, nargs="*",
                     default=list(SWEEP_PROPORTIONS))
+    # choices follow the registry (ported ElastiSim policies included);
+    # the *default* stays pinned to the explicit paper subset so
+    # registering a strategy never silently changes the default grid
     ap.add_argument("--strategies", nargs="*",
                     default=list(MALLEABLE_STRATEGY_NAMES),
-                    choices=list(MALLEABLE_STRATEGY_NAMES))
+                    choices=list(registered_strategy_names(
+                        sweepable_only=True)))
     ap.add_argument("--engine", choices=list(ENGINES),
                     default=default_engine,
                     help="des: reference numpy DES (cell-parallel); "
@@ -81,6 +86,12 @@ def add_scenario_arguments(ap: argparse.ArgumentParser) -> None:
                     default=DEFAULT_BACKFILL_DEPTH,
                     help="EASY backfill scan depth, honoured by every "
                          "engine (the policy core bounds the scan itself)")
+    ap.add_argument("--queue-order", choices=["fcfs", "sjf"],
+                    default="fcfs",
+                    help="waiting-queue scan order: fcfs (default) or "
+                         "sjf keyed on walltime estimates (composes with "
+                         "the walltime-accuracy axes; strategies that pin "
+                         "an order, e.g. rigid_sjf, override this)")
     ap.add_argument("--rigid-frac", type=float, default=0.0,
                     help="job-class mix: fraction pinned rigid (never "
                          "transformed, normal queue rank)")
@@ -99,6 +110,7 @@ def scenario_from_args(args: argparse.Namespace) -> ScenarioConfig:
         walltime_seed=args.walltime_seed,
         arrival_compression=args.arrival_compression,
         backfill_depth=args.backfill_depth,
+        queue_order=getattr(args, "queue_order", "fcfs"),
         job_classes=JobClasses(
             rigid=args.rigid_frac,
             on_demand=args.on_demand_frac,

@@ -25,18 +25,39 @@ from repro.core.strategies import MALLEABLE_STRATEGY_NAMES
 # Sweepable scenario axes for --compare-scenarios: axis name -> how a
 # swept value lands in the ScenarioConfig.  Plain fields replace
 # themselves; the job-class mix axes rewrite the JobClasses partition
-# (the malleable-eligible fraction absorbs the remainder).
+# (the malleable-eligible fraction absorbs the remainder); queue_order
+# is the one *categorical* axis (values "fcfs" / "sjf", not numbers).
 SCENARIO_AXES = ("walltime_factor", "walltime_jitter",
                  "arrival_compression", "backfill_depth",
+                 "queue_order",
                  "on_demand_frac", "rigid_frac")
 
 
+def axis_key(value):
+    """Canonical dict key for a swept axis value: float when numeric
+    (the historical artifact keys, e.g. ``"256.0"``), the string itself
+    for categorical axes (``"sjf"``)."""
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return str(value)
+
+
+def axis_label(axis: str, value) -> str:
+    """``axis=value`` column label, ``%g``-formatted when numeric."""
+    key = axis_key(value)
+    return (f"{axis}={key:g}" if isinstance(key, float)
+            else f"{axis}={key}")
+
+
 def scenario_variant(base: ScenarioConfig, axis: str,
-                     value: float) -> ScenarioConfig:
+                     value) -> ScenarioConfig:
     """``base`` with the swept ``axis`` set to ``value``."""
     if axis not in SCENARIO_AXES:
         raise ValueError(f"unknown scenario axis {axis!r}; "
                          f"choose from {SCENARIO_AXES}")
+    if axis == "queue_order":
+        return dataclasses.replace(base, queue_order=str(value))
     if axis == "backfill_depth":
         return dataclasses.replace(base, backfill_depth=int(value))
     if axis in ("on_demand_frac", "rigid_frac"):
@@ -61,11 +82,14 @@ def render_scenario_table(axis: str, results_by_value: Dict[float, Dict],
     metric block shows the rigid baseline and every strategy at the
     spec's highest malleable proportion, one column per axis value.
     """
-    values = sorted(results_by_value)
+    # one axis sweeps one value type (all-float, or all-str for the
+    # categorical queue_order axis); the type tag keeps mixed dicts sortable
+    values = sorted(results_by_value,
+                    key=lambda v: (isinstance(v, str), v))
     first = results_by_value[values[0]]
     meta = first["_meta"]
     pct = max(int(p * 100) for p in meta["proportions"])
-    labels = [f"{axis}={v:g}" for v in values]
+    labels = [axis_label(axis, v) for v in values]
     width = max(16, max(len(lb) for lb in labels) + 2)
     out = [f"== Scenario sensitivity: {meta['workload']} x {axis} "
            f"(scale {meta['scale']}, {meta['seeds']} seeds, "
@@ -117,7 +141,11 @@ def render_sweep_table(results: Dict, metrics: Sequence[str] = (
             cells = []
             for p in props:
                 if p == 0:
-                    v = rigid_v
+                    # malleable strategies degenerate to the rigid
+                    # baseline at 0%; a pinned-order rigid strategy
+                    # (rigid_sjf) carries its own aggregate there
+                    r = results.get(f"{strat}@0", {})
+                    v = r.get(f"{metric}_mean", rigid_v)
                 else:
                     r = results.get(f"{strat}@{p}", {})
                     v = r.get(f"{metric}_mean", float("nan"))

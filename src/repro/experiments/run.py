@@ -29,6 +29,7 @@ from typing import Dict, Optional
 
 from repro import obs
 from repro.core import aggregate_seeds
+from repro.core.strategies import STRATEGIES
 from repro.sweep.cache import SweepCache
 
 from .spec import ExperimentSpec
@@ -120,6 +121,19 @@ def run_experiment(spec: ExperimentSpec, *,
         rigid = wl_metrics[("easy", 0.0, 0)]
         results: Dict[str, Dict] = {"rigid": rigid}
         for strat in spec.strategies:
+            if not STRATEGIES[strat].malleable:
+                # proportion-invariant (rigid_sjf): its single cell fills
+                # every proportion column so renderers need no special case
+                agg = aggregate_seeds([wl_metrics[(strat, 0.0, 0)]])
+                for prop in spec.proportions:
+                    results[f"{strat}@{int(prop * 100)}"] = agg
+                if verbose:
+                    print(f"[experiment:{name}] {strat} (rigid, all "
+                          f"proportions): turnaround="
+                          f"{agg['turnaround_mean_mean']:,.0f} "
+                          f"wait={agg['wait_mean_mean']:,.0f} "
+                          f"util={agg['utilization_mean']:.3f}")
+                continue
             for prop in spec.proportions:
                 if prop == 0.0:
                     results[f"{strat}@0"] = rigid
@@ -178,13 +192,15 @@ def sweep_scenario_axis(spec: ExperimentSpec, axis: str,
     """
     import dataclasses
 
-    from .report import scenario_variant
+    from .report import axis_key, scenario_variant
 
-    out: Dict[float, Dict] = {}
+    out: Dict = {}
     for value in values:
         variant = dataclasses.replace(
             spec, scenario=scenario_variant(spec.scenario, axis, value))
-        out[float(value)] = run_experiment(variant, **run_kwargs)
+        # numeric axes keep the historical float keys; the categorical
+        # queue_order axis keys by the value string itself ("sjf")
+        out[axis_key(value)] = run_experiment(variant, **run_kwargs)
     return out
 
 

@@ -87,7 +87,10 @@ class ExperimentSpec:
         for strat in self.strategies:
             if strat not in STRATEGIES:
                 raise ValueError(f"unknown strategy {strat!r}")
-            if not STRATEGIES[strat].malleable:
+            s = STRATEGIES[strat]
+            if not s.malleable and s.queue_order == "fcfs":
+                # a non-malleable FCFS strategy IS the implied baseline;
+                # rigid_sjf is sweepable (its queue order distinguishes it)
                 raise ValueError(f"strategy {strat!r} is the rigid baseline;"
                                  " it is implied by proportion 0")
         if self.engine not in ENGINES:
@@ -103,9 +106,17 @@ class ExperimentSpec:
 
     # -- derived grid ---------------------------------------------------
     def cells(self) -> List[Cell]:
-        """The cell grid: one rigid baseline + strategy x prop>0 x seed."""
+        """The cell grid: one rigid baseline + strategy x prop>0 x seed.
+
+        Non-malleable sweepable strategies (``rigid_sjf``) ignore the
+        malleable transform entirely, so they contribute a single
+        proportion-0 cell instead of a redundant prop x seed block.
+        """
         out: List[Cell] = [("easy", 0.0, 0)]
         for strat in self.strategies:
+            if not STRATEGIES[strat].malleable:
+                out.append((strat, 0.0, 0))
+                continue
             for prop in self.proportions:
                 if prop == 0.0:
                     continue

@@ -49,10 +49,14 @@ single policy core shared with the numpy DES and the dense-tick
    supercomputer grids.  Per-lane results are bit-identical to running each
    workload's batch alone (padding contributes zeros to every reduction).
 
-Strategy *structure* is static per compiled engine (greedy vs. balanced);
-strategy *parameters* (start want/floor, shrink floor, priority reference)
-are data, so EASY/MIN/PREF/KEEPPREF lanes share one compilation and one
-batch.
+Strategy *structure* is static per compiled engine (greedy / balanced /
+pooled / stealing, plus the ``with_sjf`` queue-order flag — see
+``docs/strategies.md``); strategy *parameters* (start want/floor, shrink
+floor, priority reference, preferred allocation, pool share, steal
+margin, queue-order sort key) are data, so all registry strategies of one
+structure share one compilation and one batch.  FCFS lanes carry a
+monotone sort key, so an all-FCFS batch compiles ``with_sjf`` away
+entirely and mixed FCFS+SJF batches share the permuted pass.
 
 Because per-lane results are independent of batch composition, a batch can
 also be *split* along the lane axis (:func:`take_lanes` / :func:`pad_lanes`)
@@ -87,7 +91,7 @@ from repro.core.passes import PassParams, schedule_tick, start_policies
 from repro.core.scenario import DEFAULT_BACKFILL_DEPTH
 from repro.core.speedup import (TransformConfig, amdahl_speedup,
                                 batched_malleable_params)
-from repro.core.strategies import Strategy
+from repro.core.strategies import Strategy, effective_queue_order
 
 # Bump when engine semantics change: invalidates sweep-cache entries.
 # v2: shadow-time EASY backfill (head reservation) via the shared policy
@@ -95,7 +99,11 @@ from repro.core.strategies import Strategy
 # v3: the EASY scan is bounded by backfill_depth (per-lane data, same
 # rank cutoff as the DES queue slice) instead of scanning the whole
 # active window; workload-class queue priority (on-demand lanes).
-ENGINE_VERSION = 3
+# v4: data-parameterised strategy registry — pooled / stealing pass
+# structures (pref_common_pool, steal_agreement), per-lane pool-share /
+# steal-margin / preferred-allocation data, and the queue-order axis
+# (per-lane SJF sort keys permuting the slot-window queue order).
+ENGINE_VERSION = 4
 
 _TICK_EPS = 1e-6   # ceil guard, matches the DES event quantization
 _REM_EPS = 1e-5    # remaining-work completion threshold (fraction of job)
@@ -126,9 +134,14 @@ class BatchedLanes(NamedTuple):
     shrink_floor: jax.Array  # i32 (B, n) smallest Step-2 allocation
     prio_ref: jax.Array      # i32 (B, n): greedy priority = alloc - prio_ref
     on_demand: jax.Array     # bool (B, n) queue-priority class
+    pref_nodes: jax.Array    # i32 (B, n) preferred allocation ([pooled])
+    sort_key: jax.Array      # f32 (B, n) queue-order key (submit rank
+                             # under FCFS — monotone — walltime under SJF)
     capacity: jax.Array      # i32 (B,) cluster nodes of the lane
     tick: jax.Array          # f32 (B,) scheduling granularity of the lane
     backfill_depth: jax.Array  # i32 (B,) EASY scan bound of the lane
+    pool_share: jax.Array    # f32 (B,) shared-pool fraction ([pooled])
+    steal_margin: jax.Array  # i32 (B,) slack above average ([stealing])
 
     @property
     def n_lanes(self) -> int:
@@ -141,7 +154,8 @@ class BatchedLanes(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    balanced: bool = False    # AVG lanes (balanced redistribution)
+    structure: str = "greedy"  # static pass structure of the batch's
+                               # lanes: greedy|balanced|pooled|stealing
     window: int = 0           # ladder floor (starting bucket); 0 = auto:
                               # pick the bucket covering the lane-statics
                               # peak-active bound (128-slot ladder floor)
@@ -164,22 +178,31 @@ def build_lanes(
     config: TransformConfig = TransformConfig(),
     tick: float = 1.0,
     backfill_depth: int = DEFAULT_BACKFILL_DEPTH,
+    queue_order: str = "fcfs",
 ) -> Tuple[BatchedLanes, np.ndarray]:
     """Stack (strategy, proportion, seed) lanes into device arrays.
 
-    All strategies in ``lanes`` must share the same engine structure
-    (``strategy.balanced``).  Returns the batch plus ``order``, the
-    submit-sort permutation (results come back in sorted order; apply
+    All strategies in ``lanes`` must share the same engine pass structure
+    (``strategy.structure``; non-malleable lanes run any structure as
+    data).  ``queue_order`` is the scenario's queue order — a strategy
+    that pins its own (``rigid_sjf``) overrides it per lane
+    (:func:`repro.core.strategies.effective_queue_order`); FCFS lanes get
+    a monotone (submit-rank) sort key, SJF lanes their walltime
+    estimates.  Returns the batch plus ``order``, the submit-sort
+    permutation (results come back in sorted order; apply
     ``np.argsort(order)`` to recover original job order).
     """
-    if len({s.balanced for s, _, _ in lanes if s.malleable}) > 1:
-        raise ValueError("lanes mix balanced and greedy engine structures")
+    if len({s.structure for s, _, _ in lanes if s.malleable}) > 1:
+        raise ValueError(
+            "lanes mix engine pass structures (greedy/balanced/pooled/"
+            "stealing); group lanes by strategy.structure")
     order = np.argsort(workload.submit, kind="stable")
     w = workload.take(order)
     params = batched_malleable_params(
         w, [(prop, seed) for _, prop, seed in lanes], cluster_nodes, config)
 
     B = len(lanes)
+    n = w.n_jobs
     req = np.tile(w.nodes_req, (B, 1))
     mall = params["malleable"]
     mn, mx = params["min_nodes"], params["max_nodes"]
@@ -189,12 +212,20 @@ def build_lanes(
     floor = np.empty_like(req)
     sfloor = np.empty_like(req)
     prio_ref = np.empty_like(req)
+    sort_key = np.empty((B, n), np.float32)
+    pool_share = np.empty((B,), np.float32)
+    steal_margin = np.empty((B,), np.int32)
+    fcfs_key = np.arange(n, dtype=np.float32)  # monotone: identity perm
     for b, (strat, _, _) in enumerate(lanes):
         if not strat.malleable:
             mall[b] = False
             mn[b] = mx[b] = req[b]
         want[b], floor[b], sfloor[b], prio_ref[b] = start_policies(
             strat, mall[b], mn[b], pref[b], req[b])
+        sjf = effective_queue_order(strat, queue_order) == "sjf"
+        sort_key[b] = w.walltime if sjf else fcfs_key
+        pool_share[b] = strat.pool_share
+        steal_margin[b] = strat.steal_margin
 
     s_ref = amdahl_speedup(req, pfrac)
     batch = BatchedLanes(
@@ -210,9 +241,13 @@ def build_lanes(
         shrink_floor=jnp.asarray(sfloor, jnp.int32),
         prio_ref=jnp.asarray(prio_ref, jnp.int32),
         on_demand=jnp.asarray(np.tile(w.on_demand, (B, 1))),
+        pref_nodes=jnp.asarray(pref, jnp.int32),
+        sort_key=jnp.asarray(sort_key, jnp.float32),
         capacity=jnp.full((B,), int(cluster_nodes), jnp.int32),
         tick=jnp.full((B,), float(tick), jnp.float32),
         backfill_depth=jnp.full((B,), int(backfill_depth), jnp.int32),
+        pool_share=jnp.asarray(pool_share, jnp.float32),
+        steal_margin=jnp.asarray(steal_margin, jnp.int32),
     )
     return batch, order
 
@@ -231,10 +266,13 @@ def concat_lanes(batches: Sequence[BatchedLanes]) -> BatchedLanes:
         "pfrac": jnp.float32(0.0), "inv_ref": jnp.float32(1.0),
         "wall_work": jnp.float32(1.0), "want": 1, "floor": 1,
         "shrink_floor": 1, "prio_ref": 0, "on_demand": False,
+        "pref_nodes": 1,
+        # padding must sort behind every real job in the permuted queue
+        "sort_key": jnp.float32(jnp.inf),
     }
 
     def pad(name, arr, n):
-        if name in ("capacity", "tick", "backfill_depth") or n == n_max:
+        if arr.ndim == 1 or n == n_max:  # (B,) per-lane fields need no pad
             return arr
         return jnp.pad(arr, ((0, 0), (0, n_max - n)),
                        constant_values=pad_fill[name])
@@ -344,10 +382,11 @@ def lane_statics(batch: BatchedLanes) -> Dict[str, int]:
 
     ``prio_lo``/``prio_hi``/``span_max`` bound the greedy/balanced passes'
     integer and level bisections, ``with_classes`` gates the on-demand
-    queue-priority passes, ``min_depth`` decides whether the EASY rank
-    cutoff can bind, and ``peak_active`` (a lower bound on the largest
-    per-lane active set, :func:`_peak_active_bound`) picks the starting
-    window bucket.  They only need to *cover* the lanes actually run, so
+    queue-priority passes, ``with_sjf`` gates the queue-order permutation
+    (an all-FCFS batch carries monotone sort keys and compiles the flag
+    away), ``min_depth`` decides whether the EASY rank cutoff can bind,
+    and ``peak_active`` (a lower bound on the largest per-lane active
+    set, :func:`_peak_active_bound`) picks the starting window bucket.  They only need to *cover* the lanes actually run, so
     a chunked execution (:mod:`repro.sweep.shard`) computes them once on
     the **full** batch and reuses them for every chunk — keeping each
     chunk's compiled pass (notably the balanced level bisection, whose
@@ -355,6 +394,8 @@ def lane_statics(batch: BatchedLanes) -> Dict[str, int]:
     batch's, every chunk on one compilation, and every chunk on the same
     window bucket.
     """
+    sk = np.asarray(batch.sort_key, np.float64)
+    sk = np.where(np.isfinite(sk), sk, np.finfo(np.float64).max)
     return {
         "prio_lo": -int(np.max(np.asarray(batch.prio_ref))),
         "prio_hi": int(np.max(np.asarray(batch.max_nodes
@@ -362,6 +403,10 @@ def lane_statics(batch: BatchedLanes) -> Dict[str, int]:
         "span_max": int(np.max(np.asarray(batch.max_nodes
                                           - batch.min_nodes))),
         "with_classes": bool(np.any(np.asarray(batch.on_demand))),
+        # non-monotone sort keys are exactly the lanes whose queue-order
+        # permutation is not the identity (inf padding maps to the float
+        # max, so trailing padding never forces the flag on)
+        "with_sjf": bool(np.any(np.diff(sk, axis=-1) < 0)),
         "min_depth": int(np.min(np.asarray(batch.backfill_depth))),
         "peak_active": _peak_active_bound(batch),
     }
@@ -439,12 +484,14 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
       compression, so they may ride in cell metrics without breaking
       execution-plan parity); ``steps, window, finished``; and
       execution-only observability scalars ``compile_s, execute_s,
-      retraces, warm_hits, escalations, compressed_events`` (wall-clock
-      split by whether the chunk call paid a trace+compile, the number of
-      fresh foreground compile variants, warm AOT executables used,
-      window escalations, and per-lane events retired beyond the first of
-      their scan step — these describe *this execution*, never the cells,
-      and must stay out of metrics).
+      compile_variants, retraces, warm_hits, escalations,
+      compressed_events`` (wall-clock split by whether the chunk call
+      paid a trace+compile, the distinct static chunk configurations this
+      run dispatched — the compile-ladder width ``tools/check_perf.py``
+      gates — the number of fresh foreground compile variants, warm AOT
+      executables used, window escalations, and per-lane events retired
+      beyond the first of their scan step — these describe *this
+      execution*, never the cells, and must stay out of metrics).
 
     The window walks a static bucket ladder (:func:`window_ladder`): the
     starting rung covers the lane-statics peak-active bound (or the
@@ -475,6 +522,8 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     span_max = st["span_max"]
     # static: class-free batches compile the class-free pass (no overhead)
     with_classes = st["with_classes"]
+    # static: all-FCFS batches compile the queue-order permutation away
+    with_sjf = bool(st.get("with_sjf", False))
     # queue ranks never exceed the window's queued count, so a depth >= W
     # cannot cut the scan: such compilations skip the rank mask entirely
     # (the default-depth grid pays nothing for the axis)
@@ -490,12 +539,13 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
 
     def key_for(w):
         return (cfg, n, B, w, prio_lo, prio_hi, span_max, with_classes,
-                min_depth < w)
+                with_sjf, min_depth < w)
 
     def fn_for(w):
         # module-level cache: one trace/compile per static configuration
         return _chunk_fn(cfg, n, B, w, prio_lo, prio_hi, span_max,
-                         with_classes, depth_bounded=min_depth < w)
+                         with_classes, with_sjf=with_sjf,
+                         depth_bounded=min_depth < w)
 
     real = jnp.isfinite(batch.submit)  # padding slots are born DONE
     full = dict(
@@ -538,6 +588,7 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     warm_hits = 0
     compile_s = 0.0
     execute_s = 0.0
+    used_keys: set = set()  # distinct static configs this run dispatched
 
     def escalate(need):
         nonlocal W, low_streak, escalations
@@ -573,6 +624,7 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
         w_peak = max(w_peak, W)
 
         ckey = key_for(W)
+        used_keys.add(ckey)
         fn, is_warm, first = None, False, False
         if ckey in _WARM_EXECUTABLES:
             fn, is_warm = _WARM_EXECUTABLES[ckey], True
@@ -646,6 +698,7 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
     out["finished"] = bool(np.all(out["state"] == DONE))
     out["compile_s"] = compile_s
     out["execute_s"] = execute_s
+    out["compile_variants"] = len(used_keys)
     out["retraces"] = retraces
     out["warm_hits"] = warm_hits
     out["escalations"] = escalations
@@ -656,15 +709,17 @@ def simulate_lanes(batch: BatchedLanes, cfg: EngineConfig,
 @functools.cache  # unbounded on purpose: see the eviction note in the doc
 def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
               prio_lo: int, prio_hi: int, span_max: int,
-              with_classes: bool = False, depth_bounded: bool = True):
+              with_classes: bool = False, with_sjf: bool = False,
+              depth_bounded: bool = True):
     """Compile the compaction + K-step scan + scatter-back chunk kernel.
 
     ``capacity``, ``tick`` and ``backfill_depth`` are lane data (fields of
     the batch), not part of the compile key — one compilation serves every
     cluster (and every depth-swept lane) at a given shape, which is what
-    makes the multi-trace batch a single compile.  ``with_classes`` is the
-    one workload-derived static: it gates the on-demand queue-priority
-    passes so class-free batches pay nothing for the axis.
+    makes the multi-trace batch a single compile.  ``with_classes`` and
+    ``with_sjf`` are the lane-derived statics: they gate the on-demand
+    queue-priority passes and the queue-order permutation so class-free /
+    all-FCFS batches pay nothing for either axis.
 
     The cache is **unbounded** (`functools.cache`, not an lru_cache with a
     maxsize): an evicted entry would silently recompile mid-sweep on
@@ -797,14 +852,16 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             max_nodes=bj.max_nodes, want=bj.want, floor=bj.floor,
             shrink_floor=bj.shrink_floor, prio_ref=bj.prio_ref,
             pfrac=bj.pfrac, wall_work=bj.wall_work,
-            on_demand=bj.on_demand)
+            on_demand=bj.on_demand, pref_nodes=bj.pref_nodes,
+            sort_key=bj.sort_key if with_sjf else None)
         bstate, balloc, bstart = schedule_tick(
             params, bstate, balloc, brem, bstart, halted[:, None],
-            capacity, t_now, balanced=cfg.balanced,
+            capacity, t_now, structure=cfg.structure,
             fill_rounds=cfg.fill_rounds, prio_lo=prio_lo, prio_hi=prio_hi,
             span_max=span_max, expand_backend=cfg.expand_backend,
             backfill_depth=depth if depth_bounded else None,
-            with_classes=with_classes)
+            with_classes=with_classes, with_sjf=with_sjf,
+            pool_share=bj.pool_share, steal_margin=bj.steal_margin)
 
         # net per-invocation op accounting (jobs running before & after)
         still = running0 & (bstate == RUNNING)
@@ -890,9 +947,13 @@ def _chunk_fn(cfg: EngineConfig, n: int, B: int, W: int,
             shrink_floor=g2(batch.shrink_floor, 1),
             prio_ref=g2(batch.prio_ref, 0),
             on_demand=g2(batch.on_demand, False),
+            pref_nodes=g2(batch.pref_nodes, 1),
+            sort_key=g2(batch.sort_key, INF),  # padding sorts last
             capacity=batch.capacity,
             tick=batch.tick,
             backfill_depth=batch.backfill_depth,
+            pool_share=batch.pool_share,
+            steal_margin=batch.steal_margin,
         )
         n_prefetch = jnp.sum(sel & pending, axis=-1)
         lim_idx = aptr + n_prefetch

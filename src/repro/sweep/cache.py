@@ -46,7 +46,10 @@ from repro.core.speedup import TransformConfig
 # invalidated alongside the jax ENGINE_VERSION mechanism.
 # v2: workload-class queue priority (on-demand jobs outrank normal queued
 # jobs) and the scenario schema gaining job_classes / walltime_dist.
-DES_ENGINE_VERSION = 2
+# v3: data-parameterised strategy registry — pooled / stealing pass
+# structures (pref_common_pool, steal_agreement) and the queue-order
+# scenario axis (SJF insertion order; rigid_sjf pins it per strategy).
+DES_ENGINE_VERSION = 3
 
 
 def engine_version(engine: str) -> int:

@@ -62,6 +62,8 @@ def test_spec_key_stable_across_instances():
     {"scenario": ScenarioConfig(walltime_jitter=0.5, walltime_seed=7)},
     {"scenario": ScenarioConfig(arrival_compression=2.0)},
     {"scenario": ScenarioConfig(backfill_depth=16)},
+    {"scenario": ScenarioConfig(queue_order="sjf")},
+    {"strategies": ("min", "steal_agreement")},
     {"scenario": ScenarioConfig(job_classes=JobClasses(
         rigid=0.1, on_demand=0.2, malleable=0.7))},
     {"scenario": ScenarioConfig(job_classes=JobClasses(
@@ -105,6 +107,7 @@ def test_spec_key_tracks_engine_version(monkeypatch):
     {"scenario": ScenarioConfig(walltime_factor=4.0)},
     {"scenario": ScenarioConfig(arrival_compression=0.5)},
     {"scenario": ScenarioConfig(backfill_depth=8)},
+    {"scenario": ScenarioConfig(queue_order="sjf")},
     {"trace_seed": 7},
 ])
 def test_cell_fingerprint_tracks_scenario_axes(change):
@@ -128,6 +131,80 @@ def test_spec_rejects_bad_inputs():
         ScenarioConfig(arrival_compression=0.0)
     with pytest.raises(ValueError):  # crosscheck is jax-vs-DES only
         run_experiment(ExperimentSpec(**TINY, engine="des"), crosscheck=2)
+
+
+def test_rigid_sjf_is_sweepable_and_contributes_one_cell():
+    """rigid_sjf is accepted (its queue order distinguishes it from the
+    implied rigid-EASY baseline) and, being proportion-invariant,
+    contributes exactly one proportion-0 cell regardless of the
+    proportion/seed grid."""
+    spec = ExperimentSpec(workloads=("knl",), seeds=3,
+                          proportions=(0.0, 0.5, 1.0),
+                          strategies=("min", "rigid_sjf"))
+    cells = spec.cells()
+    sjf_cells = [c for c in cells if c[0] == "rigid_sjf"]
+    assert sjf_cells == [("rigid_sjf", 0.0, 0)]
+    # the malleable strategy still gets the full prop>0 x seed product
+    assert len([c for c in cells if c[0] == "min"]) == 2 * 3
+
+
+def test_registering_a_strategy_does_not_change_default_grid():
+    """The sweep grid derives from the registry via an explicit
+    paper-five subset: registering a new strategy must not silently grow
+    the default grid or move any spec fingerprint (committed artifacts
+    stay valid)."""
+    from repro.core import strategies as strat_mod
+    from repro.core.strategies import (StrategySpec, register_strategy,
+                                       registered_strategy_names)
+
+    base = ExperimentSpec(**TINY)
+    k0, cells0 = base.key(), base.cells()
+    fp0 = base.cell_fingerprint("haswell", ("min", 1.0, 0))
+    probe = StrategySpec(name="probe_xyz", malleable=True,
+                         structure="stealing", steal_margin=1)
+    register_strategy(probe)
+    try:
+        assert "probe_xyz" in registered_strategy_names(sweepable_only=True)
+        fresh = ExperimentSpec(**TINY)
+        assert fresh.key() == k0
+        assert fresh.cells() == cells0
+        assert fresh.cell_fingerprint("haswell", ("min", 1.0, 0)) == fp0
+        # defaults are the pinned paper grid, not "everything registered"
+        assert fresh.strategies == ("min", "avg")
+        assert "probe_xyz" not in ExperimentSpec(
+            workloads=("haswell",)).strategies
+        # but an explicit opt-in works end to end
+        opted = ExperimentSpec(workloads=("haswell",), seeds=1,
+                               proportions=(1.0,),
+                               strategies=("probe_xyz",))
+        assert ("probe_xyz", 1.0, 0) in opted.cells()
+        # re-registering the same name is an error, not a silent replace
+        with pytest.raises(ValueError):
+            register_strategy(probe)
+    finally:
+        del strat_mod.STRATEGIES["probe_xyz"]
+
+
+def test_engine_version_bump_is_per_cell_not_store_wide(tmp_path):
+    """An engine-version bump must invalidate cells going forward while
+    leaving cells stored under the old fingerprint readable — a stacked
+    bump (new strategies added, version raised) cannot wipe the store."""
+    spec = ExperimentSpec(**dict(TINY, seeds=1, strategies=("min",)))
+    run_experiment(spec, cache_dir=tmp_path, verbose=False)
+    store = SweepCache(tmp_path)
+    cell = ("min", 1.0, 0)
+    old_fp = spec.cell_fingerprint("haswell", cell)
+    assert store.get(old_fp) is not None
+
+    import unittest.mock as mock
+    with mock.patch.object(cache_mod, "DES_ENGINE_VERSION",
+                           cache_mod.DES_ENGINE_VERSION + 1):
+        new_fp = spec.cell_fingerprint("haswell", cell)
+        assert SweepCache.key(new_fp) != SweepCache.key(old_fp)
+        # new-version cells miss (they must be recomputed) ...
+        assert store.get(new_fp) is None
+        # ... but the old-fingerprint cells remain readable in place
+        assert store.get(old_fp) is not None
 
 
 # ----------------------------------------------------------------------
@@ -411,6 +488,7 @@ def test_jax_des_backend_parity_same_spec(tmp_path):
     ScenarioConfig(backfill_depth=2, arrival_compression=4.0),
     ScenarioConfig(job_classes=JobClasses(
         on_demand=0.3, malleable=0.7), arrival_compression=4.0),
+    ScenarioConfig(queue_order="sjf", arrival_compression=4.0),
 ])
 def test_jax_des_parity_on_scenario_axes(scenario):
     """The depth-bounded scan and the job-class queue priority stay within
@@ -515,5 +593,30 @@ def test_scenario_variant_axes():
                                        malleable=0.6)
     v = scenario_variant(base, "backfill_depth", 4)
     assert v.backfill_depth == 4 and isinstance(v.backfill_depth, int)
+    v = scenario_variant(base, "queue_order", "sjf")
+    assert v.queue_order == "sjf"
     with pytest.raises(ValueError):
         scenario_variant(base, "nope", 1.0)
+
+
+def test_compare_scenarios_categorical_axis(tmp_path, capsys):
+    """The queue_order axis sweeps categorically: string keys survive the
+    reporter and the artifact round-trip (numeric axes keep float keys —
+    covered by test_compare_scenarios_reporter)."""
+    from repro.experiments import __main__ as exp_main
+
+    out = tmp_path / "sens-qo.json"
+    rc = exp_main.main([
+        "--workload", "haswell", "--scale", "0.003", "--seeds", "1",
+        "--proportions", "0.0", "1.0", "--strategies", "min",
+        "--engine", "des", "--cache-dir", str(tmp_path / "store"),
+        "--compare-scenarios", "queue_order",
+        "--scenario-values", "fcfs", "sjf", "--out", str(out)])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "queue_order=fcfs" in text and "queue_order=sjf" in text
+    payload = json.loads(out.read_text())
+    assert payload["axis"] == "queue_order"
+    assert set(payload["results"]) == {"fcfs", "sjf"}
+    for res in payload["results"].values():
+        assert "rigid" in res["haswell"]

@@ -119,7 +119,7 @@ def test_chunked_balanced_engine_bitwise_parity():
     lanes = [(STRATEGIES["avg"], 0.3, 0), (STRATEGIES["avg"], 0.8, 0),
              (STRATEGIES["avg"], 1.0, 1)]
     batch, _ = build_lanes(_wl(seed=3), 10, lanes)
-    cfg = EngineConfig(balanced=True, window=16, chunk=64)
+    cfg = EngineConfig(structure="balanced", window=16, chunk=64)
     mono = simulate_lanes(batch, cfg)
     for c in simulate_lanes_chunked(batch, cfg, ShardConfig(chunk_lanes=1)):
         for k in ("state", "alloc", "start_t", "end_t",

@@ -93,7 +93,7 @@ def test_balanced_engine_runs_avg_lanes():
     w = _wl(seed=3)
     lanes = [(STRATEGIES["avg"], 0.8, 0), (STRATEGIES["avg"], 1.0, 1)]
     batch, order = build_lanes(w, 10, lanes)
-    cfg = EngineConfig(balanced=True, window=16, chunk=64)
+    cfg = EngineConfig(structure="balanced", window=16, chunk=64)
     res = simulate_lanes(batch, cfg)
     assert res["finished"]
     assert int(res["trace_busy"].max()) <= TINY.nodes

@@ -25,6 +25,12 @@ Comparison contract:
   (a jump is a retrace leak or a broken warm-up) and ``execute_s``
   against ``--execute-tolerance`` (a jump is an engine slowdown).  The
   hard ratio and ``--warn-only`` apply the same way as for total_s.
+* ``compile_variants`` (jax engine) — the count of distinct chunk-kernel
+  compilations the sweep dispatched — is gated as an **exact budget**
+  when both records carry it: more variants than the baseline means a
+  lane knob that should be data became a static (a compile-budget leak),
+  which is deterministic, so no tolerance applies (``--warn-only`` still
+  downgrades it on mixed-version runners).
 * ``--compare-cold COLD.json`` switches to the warm-rerun check: the
   --timing record must be a warm rerun of the same grid as COLD.json and
   its compile_s must be at most ``(1 - --min-compile-reduction)`` of the
@@ -91,7 +97,8 @@ def components_of(rec: dict) -> dict:
     """The gated compile/execute split, from either record shape."""
     roof = rec.get("roofline")
     src = roof if isinstance(roof, dict) else rec
-    return {k: src.get(k) for k in ("compile_s", "execute_s")
+    return {k: src.get(k)
+            for k in ("compile_s", "execute_s", "compile_variants")
             if isinstance(src.get(k), (int, float))}
 
 
@@ -105,6 +112,8 @@ def baseline_from(rec: dict) -> dict:
         out["execute_s"] = roof.get("execute_s")
         out["achieved_lane_steps_per_s"] = roof.get(
             "achieved_lane_steps_per_s")
+        if isinstance(roof.get("compile_variants"), (int, float)):
+            out["compile_variants"] = int(roof["compile_variants"])
     return out
 
 
@@ -255,6 +264,22 @@ def main(argv=None) -> int:
         if comp in got_c and comp in base_c and base_c[comp] > 0:
             failed |= check_ratio(comp, got_c[comp], base_c[comp], tol,
                                   args.hard_ratio, args.warn_only)
+    if ("compile_variants" in got_c and "compile_variants" in base_c
+            and base_c["compile_variants"] > 0):
+        gv = int(got_c["compile_variants"])
+        bv = int(base_c["compile_variants"])
+        print(f"[check_perf] compile_variants {gv} vs baseline {bv} "
+              "(budget: got <= baseline)")
+        if gv > bv:
+            if args.warn_only:
+                print(f"[check_perf] WARN: {gv} chunk-kernel variants "
+                      f"exceed the {bv}-variant baseline budget "
+                      "(ignored: --warn-only)")
+            else:
+                print(f"[check_perf] FAIL: {gv} chunk-kernel variants "
+                      f"exceed the {bv}-variant baseline budget — a lane "
+                      "knob that should be data became a static")
+                failed |= 1
     if failed:
         return 1
     print("[check_perf] PASS")

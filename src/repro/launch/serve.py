@@ -31,6 +31,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sample", action="store_true",
+                    help="seeded categorical sampling instead of greedy "
+                         "argmax decoding")
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -43,7 +47,8 @@ def main(argv=None) -> int:
           f"{args.slots} slots, max_len {args.max_len}")
 
     engine = ServeEngine(params, cfg, n_slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len, greedy=not args.sample,
+                         sample_seed=args.sample_seed)
     reqs = []
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))

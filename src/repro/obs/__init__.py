@@ -18,10 +18,10 @@ fingerprint (regression-tested in ``tests/test_obs.py``).
 from .counters import CounterRegistry
 from .heartbeat import Heartbeat, eta_seconds, format_duration
 from .trace import (Tracer, configure, counter, enabled, flush, gauge,
-                    get_tracer, span)
+                    get_tracer, record_span, span)
 
 __all__ = [
     "CounterRegistry", "Heartbeat", "Tracer", "configure", "counter",
     "enabled", "eta_seconds", "flush", "format_duration", "gauge",
-    "get_tracer", "span",
+    "get_tracer", "record_span", "span",
 ]

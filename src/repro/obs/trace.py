@@ -151,6 +151,20 @@ class Tracer:
                 f.write(json.dumps({"kind": "counters",
                                     **self.counters.snapshot()}) + "\n")
 
+    def record_span(self, name: str, start_ns: int, **args) -> None:
+        """Record a completed span from an explicit start timestamp.
+
+        For cross-thread intervals that a ``with`` block cannot scope —
+        e.g. a request enqueued on one thread and resolved on another
+        (the serve layer's per-query latency spans).  ``start_ns`` is a
+        ``time.monotonic_ns()`` reading; duration is measured to *now*.
+        Does not touch the per-thread nesting stack.
+        """
+        if not self.enabled:
+            return
+        t0 = int(start_ns)
+        self._record(name, t0, time.monotonic_ns() - t0, args)
+
     def reset(self) -> None:
         """Drop recorded events and counters (tests, repeated runs)."""
         with self._lock:
@@ -202,6 +216,12 @@ def gauge(name: str, value: float) -> None:
     """Set a gauge on the default tracer (no-op while disabled)."""
     if _DEFAULT.enabled:
         _DEFAULT.counters.gauge(name, value)
+
+
+def record_span(name: str, start_ns: int, **args) -> None:
+    """Record a completed span on the default tracer (see
+    :meth:`Tracer.record_span`); no-op while disabled."""
+    _DEFAULT.record_span(name, start_ns, **args)
 
 
 def flush(trace_path=None, jsonl_path: Optional[str] = None) -> None:

@@ -1,1 +1,45 @@
-from . import engine  # noqa: F401
+# Serving layer: persistent low-latency front-ends over the simulators.
+#
+# - whatif: the what-if scheduling query engine — cache hits from the
+#           engine-agnostic cell store at memory speed, cache misses
+#           request-coalesced into one padded device batch (docs/serving.md)
+# - engine: continuous-batching LLM decode server (the original seed demo)
+#
+# Exports resolve lazily (PEP 562) so DES-engine services and the serve
+# tests stay jax-free; `engine` (LLM decode) pays the jax import only when
+# actually requested.
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "EngineClosedError": "whatif", "MonotonicClock": "whatif",
+    "QueryFailedError": "whatif", "QueueFullError": "whatif",
+    "WhatIfEngine": "whatif", "WhatIfQuery": "whatif",
+    "sample_queries": "whatif",
+    "ServeEngine": "engine",
+}
+
+__all__ = sorted(_EXPORTS) + ["engine", "whatif"]
+
+if TYPE_CHECKING:  # pragma: no cover
+    from . import engine, whatif
+    from .engine import ServeEngine
+    from .whatif import (EngineClosedError, MonotonicClock,
+                         QueryFailedError, QueueFullError, WhatIfEngine,
+                         WhatIfQuery, sample_queries)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+def __getattr__(name):
+    import importlib
+
+    if name in ("engine", "whatif"):
+        return importlib.import_module(f".{name}", __name__)
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(importlib.import_module(f".{module}", __name__), name)

@@ -36,13 +36,18 @@ class ServeEngine:
     """Single-sequence-slot continuous batching (batch=n_slots)."""
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
-                 max_len: int, dtype=jnp.float32, greedy: bool = True):
+                 max_len: int, dtype=jnp.float32, greedy: bool = True,
+                 sample_seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.dtype = dtype
         self.greedy = greedy
+        # seeded categorical sampling for greedy=False; the key advances
+        # per sampled token, so a (seed, submission order) pair fully
+        # determines every generation
+        self._rng_key = jax.random.key(sample_seed)
         self.cache = D.init_decode_cache(cfg, n_slots, max_len, dtype)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_len = np.zeros(n_slots, dtype=np.int32)
@@ -58,6 +63,13 @@ class ServeEngine:
     # ------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def _sample(self, logits_row) -> int:
+        """Next token from one slot's logits row (greedy or seeded)."""
+        if self.greedy:
+            return int(jnp.argmax(logits_row))
+        self._rng_key, sub = jax.random.split(self._rng_key)
+        return int(jax.random.categorical(sub, logits_row))
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):
@@ -84,7 +96,7 @@ class ServeEngine:
                 idx[bdim] = slice(slot, slot + 1)
                 return big.at[tuple(idx)].set(small.astype(big.dtype))
             self.cache = jax.tree_util.tree_map(splice, self.cache, cache1)
-            tok = int(jnp.argmax(logits[0])) if self.greedy else 0
+            tok = self._sample(logits[0])
             req.out_tokens.append(tok)
             self.slot_req[slot] = req
             self.slot_len[slot] = len(req.prompt)
@@ -109,7 +121,7 @@ class ServeEngine:
         self.steps += 1
         for s in active:
             req = self.slot_req[s]
-            tok = int(jnp.argmax(logits[s])) if self.greedy else 0
+            tok = self._sample(logits[s])
             req.out_tokens.append(tok)
             self.slot_len[s] += 1
             if (len(req.out_tokens) >= req.max_new_tokens

@@ -404,3 +404,207 @@ def test_committed_baseline_matches_its_own_grid():
     assert rec["engine"] == "jax"
     assert rec["batch_workloads"] == ["haswell"]
     assert rec["total_s"] > 0
+
+
+# ----------------------------------------------------------------------
+# serve-layer observability: record_span + concurrent writers
+def test_record_span_from_explicit_start():
+    import time
+
+    obs.configure(enabled=True)
+    t0 = time.monotonic_ns()
+    obs.record_span("serve.query", t0, path="memo")
+    evs = obs.get_tracer().events()
+    assert len(evs) == 1
+    ev = evs[0]
+    assert ev["name"] == "serve.query" and ev["ph"] == "X"
+    assert ev["dur"] >= 0 and ev["args"]["path"] == "memo"
+    # does not touch the per-thread nesting stack
+    with obs.span("outer"):
+        obs.record_span("serve.query", time.monotonic_ns())
+        with obs.span("inner"):
+            pass
+    by_name = {e["name"]: e for e in obs.get_tracer().events()}
+    assert by_name["inner"]["args"]["parent"] == "outer"
+
+
+def test_record_span_disabled_is_noop():
+    import time
+
+    obs.record_span("serve.query", time.monotonic_ns())
+    assert obs.get_tracer().events() == []
+
+
+def test_counters_consistent_under_concurrent_writers():
+    """The serve pattern: one dispatcher + N client threads mutating the
+    same counters/gauges; totals must be exact, never torn."""
+    obs.configure(enabled=True)
+    n_clients, n_ops = 8, 200
+    start = threading.Barrier(n_clients + 1)
+
+    def client(tid):
+        start.wait()
+        for i in range(n_ops):
+            obs.counter("serve.hit")
+            obs.counter("serve.bytes", 3)
+            obs.gauge("serve.queue_depth", float(i))
+
+    def dispatcher():
+        start.wait()
+        for i in range(n_ops):
+            obs.counter("serve.batches")
+            obs.gauge("serve.coalesce_width", float(i % 16))
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_clients)]
+    threads.append(threading.Thread(target=dispatcher))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = obs.get_tracer().counters.snapshot()
+    assert snap["counters"]["serve.hit"] == n_clients * n_ops
+    assert snap["counters"]["serve.bytes"] == 3 * n_clients * n_ops
+    assert snap["counters"]["serve.batches"] == n_ops
+    assert snap["gauges"]["serve.queue_depth"] == float(n_ops - 1)
+
+
+def test_trace_export_valid_under_concurrent_span_writers(tmp_path):
+    """Chrome-trace JSON stays well-formed when spans + record_span land
+    from many threads at once (the dispatcher/client write pattern)."""
+    import time
+
+    obs.configure(enabled=True)
+    n_threads, n_spans = 6, 40
+
+    def work(tid):
+        for i in range(n_spans):
+            with obs.span("serve.batch", width=i):
+                obs.counter("serve.computed")
+            obs.record_span("serve.query", time.monotonic_ns(), tid=tid)
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    trace = tmp_path / "trace.json"
+    obs.flush(trace_path=trace)
+    loaded = json.loads(trace.read_text())
+    assert len(loaded) == n_threads * n_spans * 2
+    for ev in loaded:
+        assert ev["ph"] == "X"
+        assert isinstance(ev["ts"], (int, float))
+        assert isinstance(ev["dur"], (int, float)) and ev["dur"] >= 0
+    names = {e["name"] for e in loaded}
+    assert names == {"serve.batch", "serve.query"}
+
+
+def test_whatif_engine_obs_counters(tmp_path):
+    """The serve engine's counter wiring end-to-end: hit/miss/dedup/
+    batches all land in the registry (docs/observability.md)."""
+    from repro.experiments.spec import ExperimentSpec
+    from repro.serve.whatif import WhatIfEngine, WhatIfQuery
+
+    obs.configure(enabled=True)
+    spec = ExperimentSpec(**TINY, engine="des")
+    eng = WhatIfEngine(spec, cache_dir=str(tmp_path / "store"),
+                       max_batch=4, max_wait_s=0.05, start=False)
+    q = WhatIfQuery(strategy="min", proportion=1.0, seed=0)
+    f1, f2 = eng.submit(q), eng.submit(q)  # miss + dedup
+    eng.start()
+    f1.result(timeout=600)
+    f2.result(timeout=600)
+    eng.query(q, timeout=600)              # memo hit
+    eng.close()
+    got = obs.get_tracer().counters.snapshot()["counters"]
+    assert got["serve.miss"] == 1
+    assert got["serve.dedup"] == 1
+    assert got["serve.memo_hit"] == 1 and got["serve.hit"] == 1
+    assert got["serve.batches"] == 1 and got["serve.computed"] == 1
+    spans = {e["name"] for e in obs.get_tracer().events()}
+    assert {"serve.batch", "serve.query"} <= spans
+
+
+# ----------------------------------------------------------------------
+# perf gate: serve records (BENCH_serve.json)
+def _serve_timing(tmp_path, name, *, total_s=2.0, **serve_over):
+    serve = {"clients": 8, "queries": 64, "unique_cells": 40,
+             "max_batch": 16, "max_wait_ms": 5.0,
+             "cold_p50_ms": 250.0, "cold_p99_ms": 400.0, "cold_qps": 35.0,
+             "warm_p50_ms": 0.2, "warm_p99_ms": 5.0, "warm_qps": 2000.0,
+             "open_offered_qps": 200.0, "open_achieved_qps": 200.0,
+             "open_p50_ms": 0.4, "open_p99_ms": 3.0}
+    serve.update(serve_over)
+    rec = {"schema_version": 1, "engine": "serve-des", "scale": 0.003,
+           "seeds": 2, "batch_workloads": ["haswell"],
+           "total_s": total_s, "serve": serve}
+    p = tmp_path / name
+    p.write_text(json.dumps(rec))
+    return p
+
+
+def test_check_perf_serve_gate(tmp_path):
+    """Latency gated upward, throughput gated downward (inverted)."""
+    cp = _check_perf()
+    baseline = tmp_path / "BENCH_serve.json"
+    base = _serve_timing(tmp_path, "serve-base.json")
+    assert cp.main(["--timing", str(base), "--baseline", str(baseline),
+                    "--write-baseline"]) == 0
+    # baseline_from must carry the serve section into the committed file
+    assert "serve" in json.loads(baseline.read_text())
+
+    ok = _serve_timing(tmp_path, "serve-ok.json",
+                       warm_p99_ms=7.0, warm_qps=1500.0)
+    assert cp.main(["--timing", str(ok), "--baseline", str(baseline)]) == 0
+    # p99 regression beyond --latency-tolerance fails
+    slow = _serve_timing(tmp_path, "serve-slow.json", warm_p99_ms=12.0)
+    assert cp.main(["--timing", str(slow), "--baseline",
+                    str(baseline)]) == 1
+    assert cp.main(["--timing", str(slow), "--baseline", str(baseline),
+                    "--warn-only"]) == 0
+    # throughput HALVING fails even though every latency got better:
+    # the inverted ratio catches qps drops
+    slow_tp = _serve_timing(tmp_path, "serve-slowtp.json",
+                            warm_qps=800.0)
+    assert cp.main(["--timing", str(slow_tp), "--baseline",
+                    str(baseline)]) == 1
+    # a faster record passes everything
+    fast = _serve_timing(tmp_path, "serve-fast.json",
+                         warm_p99_ms=2.0, warm_qps=4000.0,
+                         cold_qps=70.0)
+    assert cp.main(["--timing", str(fast), "--baseline",
+                    str(baseline)]) == 0
+
+
+def test_check_perf_serve_shape_mismatch(tmp_path):
+    """Different client/storm shape refuses to compare (exit 2), and a
+    serve record never compares against a sweep baseline."""
+    cp = _check_perf()
+    baseline = tmp_path / "BENCH_serve.json"
+    cp.main(["--timing", str(_serve_timing(tmp_path, "serve-base.json")),
+             "--baseline", str(baseline), "--write-baseline"])
+    other = _serve_timing(tmp_path, "serve-16c.json", clients=16)
+    assert cp.main(["--timing", str(other), "--baseline",
+                    str(baseline)]) == 2
+    # engine tag serve-des != jax: grid mismatch against a sweep baseline
+    sweep_baseline = tmp_path / "BENCH_sweep.json"
+    cp.main(["--timing", str(_timing(tmp_path, "sweep.json", 100.0)),
+             "--baseline", str(sweep_baseline), "--write-baseline"])
+    assert cp.main(["--timing",
+                    str(_serve_timing(tmp_path, "serve-x.json")),
+                    "--baseline", str(sweep_baseline)]) == 2
+
+
+def test_committed_serve_baseline_matches_benchmark_grid():
+    """BENCH_serve.json must stay valid for benchmarks/serve_load.py's
+    default (CI serve-smoke) grid: >= 8 clients, p50/p99 + throughput."""
+    rec = json.loads((REPO / "BENCH_serve.json").read_text())
+    assert rec["engine"] == "serve-des"
+    assert rec["batch_workloads"] == ["haswell"]
+    serve = rec["serve"]
+    assert serve["clients"] >= 8
+    for key in ("warm_p50_ms", "warm_p99_ms", "open_p99_ms",
+                "warm_qps", "cold_qps"):
+        assert serve[key] > 0, key

@@ -1,0 +1,55 @@
+"""Property tests: what-if serving is order- and batching-independent.
+
+Soft dependency like ``tests/test_redistribute_properties.py``: skipped
+when ``hypothesis`` is not installed (the deterministic seeded variant in
+``tests/test_serve_whatif.py::test_seeded_interleaving_order_independence``
+still covers the property).
+
+The property: for ANY permutation of a query storm and ANY coalescing
+configuration (max_batch), every query's answer equals the reference
+computed once from the canonical order — i.e. request coalescing is
+semantics-free under arbitrary interleavings.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.experiments.spec import ExperimentSpec  # noqa: E402
+from repro.serve.whatif import WhatIfEngine, WhatIfQuery  # noqa: E402
+
+SPEC = ExperimentSpec(workloads=("haswell",), scale=0.003, seeds=2,
+                      engine="des", proportions=(0.0, 0.5),
+                      strategies=("min", "avg"))
+
+QUERIES = [WhatIfQuery(strategy=s, proportion=p, seed=sd)
+           for s in SPEC.strategies
+           for p in SPEC.proportions
+           for sd in range(SPEC.seeds)]
+
+_reference_cache = {}
+
+
+def reference_results():
+    """Each query's metrics, computed once through a width-1 engine."""
+    if not _reference_cache:
+        eng = WhatIfEngine(SPEC, cache_dir=None, max_batch=1,
+                           max_wait_s=0.0)
+        for i, q in enumerate(QUERIES):
+            _reference_cache[i] = eng.query(q, timeout=600)
+        eng.close()
+    return _reference_cache
+
+
+@settings(max_examples=12, deadline=None)
+@given(order=st.permutations(list(range(len(QUERIES)))),
+       max_batch=st.integers(min_value=1, max_value=8))
+def test_any_interleaving_serves_reference_results(order, max_batch):
+    ref = reference_results()
+    eng = WhatIfEngine(SPEC, cache_dir=None, max_batch=max_batch,
+                       max_wait_s=0.02, start=False)
+    futs = {i: eng.submit(QUERIES[i]) for i in order}
+    eng.start()
+    got = {i: futs[i].result(timeout=600) for i in order}
+    eng.close()
+    assert got == ref

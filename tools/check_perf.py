@@ -31,6 +31,17 @@ Comparison contract:
   lane knob that should be data became a static (a compile-budget leak),
   which is deterministic, so no tolerance applies (``--warn-only`` still
   downgrades it on mixed-version runners).
+* **Serve records** (``benchmarks/serve_load.py`` →
+  ``artifacts/serve-timing-{engine}.json`` vs ``BENCH_serve.json``) carry
+  a ``serve`` section and are gated on it when both records have one:
+  warm-path and open-loop p50/p99 latency against
+  ``--latency-tolerance``, and warm/cold throughput against
+  ``--throughput-tolerance`` with the ratio **inverted** (fewer qps than
+  ``baseline / tolerance`` fails — throughput regressions shrink the
+  number).  The serve load shape (clients, queries, max_batch) must
+  match exactly or the comparison is refused, same as the grid.  Serve
+  records use engine ``serve-des`` / ``serve-jax``, so a sweep baseline
+  and a serve baseline can never be cross-compared by accident.
 * ``--compare-cold COLD.json`` switches to the warm-rerun check: the
   --timing record must be a warm rerun of the same grid as COLD.json and
   its compile_s must be at most ``(1 - --min-compile-reduction)`` of the
@@ -106,6 +117,8 @@ def baseline_from(rec: dict) -> dict:
     """The committed-baseline subset of a timing record."""
     out = {"schema_version": rec.get("schema_version", 1),
            **grid_of(rec), "total_s": float(rec["total_s"])}
+    if isinstance(rec.get("serve"), dict):
+        out["serve"] = dict(rec["serve"])
     roof = rec.get("roofline")
     if isinstance(roof, dict):
         out["compile_s"] = roof.get("compile_s")
@@ -137,6 +150,45 @@ def check_ratio(label: str, got: float, base: float, tolerance: float,
               f"{tolerance:.2f}x")
         return 1
     return 0
+
+
+# the serve-record load shape that must agree for latency/throughput
+# numbers to be comparable (see benchmarks/serve_load.py)
+SERVE_SHAPE_KEYS = ("clients", "queries", "max_batch")
+
+# serve latency metrics gated got/base <= --latency-tolerance
+SERVE_LATENCY_KEYS = ("warm_p50_ms", "warm_p99_ms", "open_p99_ms")
+
+# serve throughput metrics gated base/got <= --throughput-tolerance
+SERVE_THROUGHPUT_KEYS = ("warm_qps", "cold_qps")
+
+
+def check_serve(timing: dict, baseline: dict, args) -> int:
+    """Gate the serve section: latency up, throughput down. 0/1/2."""
+    got, base = timing["serve"], baseline["serve"]
+    got_shape = {k: got.get(k) for k in SERVE_SHAPE_KEYS}
+    base_shape = {k: base.get(k) for k in SERVE_SHAPE_KEYS}
+    if got_shape != base_shape:
+        print(f"[check_perf] MISMATCH: serve load shape {got_shape} != "
+              f"baseline {base_shape}; refusing to compare")
+        return 2
+    failed = 0
+    for key in SERVE_LATENCY_KEYS:
+        if isinstance(got.get(key), (int, float)) and \
+                isinstance(base.get(key), (int, float)) and base[key] > 0:
+            failed |= check_ratio(f"serve.{key}", float(got[key]),
+                                  float(base[key]),
+                                  args.latency_tolerance,
+                                  args.hard_ratio, args.warn_only)
+    for key in SERVE_THROUGHPUT_KEYS:
+        if isinstance(got.get(key), (int, float)) and \
+                isinstance(base.get(key), (int, float)) and got[key] > 0:
+            # inverted: the ratio grows when throughput *drops*
+            failed |= check_ratio(f"serve.{key} (baseline/got)",
+                                  float(base[key]), float(got[key]),
+                                  args.throughput_tolerance,
+                                  args.hard_ratio, args.warn_only)
+    return failed
 
 
 def compare_cold(timing: dict, cold: dict, min_reduction: float) -> int:
@@ -211,6 +263,14 @@ def main(argv=None) -> int:
     ap.add_argument("--execute-tolerance", type=float, default=1.5,
                     help="fail when execute_s > baseline * this "
                          "(default 1.5; jax records only)")
+    ap.add_argument("--latency-tolerance", type=float, default=2.0,
+                    help="fail when a serve p50/p99 latency > baseline * "
+                         "this (default 2.0; serve records only — "
+                         "latency on shared runners is noisier than "
+                         "wall-clock)")
+    ap.add_argument("--throughput-tolerance", type=float, default=2.0,
+                    help="fail when a serve qps < baseline / this "
+                         "(default 2.0; serve records only)")
     ap.add_argument("--hard-ratio", type=float, default=3.0,
                     help="always fail beyond this ratio, even with "
                          "--warn-only (default 3.0)")
@@ -231,7 +291,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.tolerance <= 1.0 or args.hard_ratio < args.tolerance:
         ap.error("need --tolerance > 1.0 and --hard-ratio >= --tolerance")
-    for name in ("compile_tolerance", "execute_tolerance"):
+    for name in ("compile_tolerance", "execute_tolerance",
+                 "latency_tolerance", "throughput_tolerance"):
         if getattr(args, name) <= 1.0:
             ap.error(f"need --{name.replace('_', '-')} > 1.0")
     if not 0.0 < args.min_compile_reduction < 1.0:
@@ -264,6 +325,12 @@ def main(argv=None) -> int:
         if comp in got_c and comp in base_c and base_c[comp] > 0:
             failed |= check_ratio(comp, got_c[comp], base_c[comp], tol,
                                   args.hard_ratio, args.warn_only)
+    if isinstance(timing.get("serve"), dict) and \
+            isinstance(baseline.get("serve"), dict):
+        serve_res = check_serve(timing, baseline, args)
+        if serve_res == 2:
+            return 2
+        failed |= serve_res
     if ("compile_variants" in got_c and "compile_variants" in base_c
             and base_c["compile_variants"] > 0):
         gv = int(got_c["compile_variants"])
